@@ -1,0 +1,131 @@
+"""Paper Figure 7 — end-to-end decoding speed across five model pairs and
+four system configurations (SwiftSpec vs the serial/unfused baselines).
+
+Regime: MEASURED dynamics + DERIVED schedule.  Per-pair compression ratios
+(serial and parallel) are measured with the real engine on smoke models of
+the same family; round times come from the roofline model of the PAPER's
+actual pairs under their best allocations.  The four configurations mirror
+Figure 8's ablation grid, so this benchmark doubles as its data source:
+
+  swiftspec            parallel tree generation + fused kernels
+  only-parallel-tree   parallel tree generation, unfused kernels
+  only-kernel-opt      serial speculation, fused kernels
+  swiftspec-base       serial speculation, unfused kernels
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecConfig, SpecEngine
+
+from benchmarks.common import build_pair, infer_time_model, write_csv
+
+# the paper's five pairs (public configs, outer shapes)
+PAIRS = {
+    "llama3-70b/3.2-3b": (
+        ModelConfig(name="llama3-70b", n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                    d_ff=28672, vocab_size=128256),
+        ModelConfig(name="llama3.2-3b", n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+                    d_ff=8192, vocab_size=128256),
+        "qwen2.5-14b",
+    ),
+    "dscoder-33b/1.3b": (
+        ModelConfig(name="dscoder-33b", n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+                    d_ff=19200, vocab_size=32256),
+        ModelConfig(name="dscoder-1.3b", n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+                    d_ff=5504, vocab_size=32256),
+        "deepseek-coder-33b",
+    ),
+    "qwen2-72b/1.5b": (
+        ModelConfig(name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                    d_ff=29568, vocab_size=152064, qkv_bias=True),
+        ModelConfig(name="qwen2-1.5b", n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                    d_ff=8960, vocab_size=151936, qkv_bias=True),
+        "qwen2.5-14b",
+    ),
+    "r1-qwen-32b/1.5b": (
+        ModelConfig(name="r1-qwen-32b", n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+                    d_ff=27648, vocab_size=152064, qkv_bias=True),
+        ModelConfig(name="r1-qwen-1.5b", n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                    d_ff=8960, vocab_size=151936, qkv_bias=True),
+        "qwen2.5-14b",
+    ),
+    "r1-llama-70b/8b": (
+        ModelConfig(name="r1-llama-70b", n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                    d_ff=28672, vocab_size=128256),
+        ModelConfig(name="r1-llama-8b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                    d_ff=14336, vocab_size=128256),
+        "granite-20b",
+    ),
+}
+
+KERNEL_SPEEDUP = 1.18  # per-inference gain from the fused kernels (Table 7 mean
+# over the latency-bound ops; the paper's ablation sees 1.16-1.21x end-to-end)
+SYNC = 20e-6
+
+
+def measured_ratios(smoke_arch: str, d: int, peak: float = 4.0):
+    cfgT, cfgD, T, D, tp, dp = build_pair(smoke_arch, peak=peak)
+    out = {}
+    prompt = (np.arange(1, 9, dtype=np.int32) % 100).reshape(1, 8)
+    for mode in ("serial", "parallel"):
+        eng = SpecEngine(T, T, SpecConfig(bs=8, w=4, c=2, d=d, mode=mode, max_new=32), 512, 512)
+        _, stats = eng.generate(tp, tp, prompt)
+        out[mode] = stats.compression_ratio
+    return out
+
+
+def run():
+    rows = []
+    summary = {}
+    for pair, (tgt, drf, smoke) in PAIRS.items():
+        # allocations: serial co-located tp8; parallel disaggregated 6+2.
+        t_t8, _ = infer_time_model(tgt, 8, 8, 512)
+        t_d8, _ = infer_time_model(drf, 8, 8, 512)
+        t_t6, _ = infer_time_model(tgt, 6, 8, 512)
+        t_d2, _ = infer_time_model(drf, 2, 8, 512)
+        # profile-chosen depth (paper §5.5): what parallel mode hides for free;
+        # serial must PAY for the same depth to reach the same tree quality
+        d = max(1, min(int(t_t6 / t_d2), 6))
+        ratios = measured_ratios(smoke, d)
+
+        def tps(mode, fused):
+            k = KERNEL_SPEEDUP if fused else 1.0
+            if mode == "parallel":
+                t_round = max(t_t6 / k, d * t_d2 / k) + SYNC
+                return ratios["parallel"] / t_round
+            return ratios["serial"] / (t_t8 / k + d * t_d8 / k + SYNC)
+
+        cfgs = {
+            "swiftspec": tps("parallel", True),
+            "only-parallel-tree": tps("parallel", False),
+            "only-kernel-opt": tps("serial", True),
+            "swiftspec-base": tps("serial", False),
+        }
+        summary[pair] = cfgs
+        for name, v in cfgs.items():
+            rows.append([pair, name, round(ratios["serial"], 2), round(ratios["parallel"], 2),
+                         round(v, 1)])
+        print(f"  {pair:22s} " + "  ".join(f"{n}={v:6.1f}" for n, v in cfgs.items()))
+
+    path = write_csv("fig7_e2e.csv",
+                     ["pair", "config", "compression_serial", "compression_parallel", "tokens_per_s"],
+                     rows)
+    speedups = [c["swiftspec"] / c["swiftspec-base"] for c in summary.values()]
+    par_gain = [c["swiftspec"] / c["only-kernel-opt"] for c in summary.values()]
+    kern_gain = [c["swiftspec"] / c["only-parallel-tree"] for c in summary.values()]
+    print(f"  mean speedup vs swiftspec-base: {np.mean(speedups):.2f}x (paper: 1.75x)")
+    print(f"  parallel-tree contribution:     {np.mean(par_gain):.2f}x (paper: 1.43x)")
+    print(f"  kernel contribution:            {np.mean(kern_gain):.2f}x (paper: 1.16x)")
+    # TPU note (DESIGN.md §3): drafting is relatively cheaper here than on
+    # H800 (one fused XLA program vs per-kernel launches), so the paper's GPU
+    # speedup is an upper bound; we assert the adapted win remains material.
+    assert np.mean(speedups) > 1.25, np.mean(speedups)
+    assert np.mean(par_gain) > 1.05, np.mean(par_gain)
+    return path
+
+
+if __name__ == "__main__":
+    run()

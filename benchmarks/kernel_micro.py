@@ -1,0 +1,134 @@
+"""Paper Tables 3 + 7 — per-operator utilization and fused-kernel times.
+
+Regime: DERIVED (per-op roofline with v5e constants) + MEASURED correctness
+(interpret-mode kernels are validated against oracles in tests/test_kernels.py;
+wall-clock of the Python interpreter is meaningless, so times here come from
+the data-movement model that the fusions actually change).
+
+What fusion changes on TPU (DESIGN.md §3):
+  GEMM+AR     — unfused: GEMM writes partial to HBM, AR reads+writes it, plus
+                a dispatch+latency floor per op.  Fused/collective-matmul: one
+                pass, transfer overlapped, one floor.
+  splitkv attn— unfused (FA-style): partial (max,sum,acc) triples to HBM +
+                second combine kernel.  Ours: sequential-grid accumulate in
+                VMEM, single kernel.
+  SwiGLU      — unfused: x read twice, g/u round-trip HBM.  Fused: x once,
+                epilogue in-register.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+
+from benchmarks.common import AR_BASE, HBM_BW, ICI_HOP, LINK_BW, OP_OVERHEAD, PEAK_FLOPS, write_csv
+
+BS = 8
+CONFIGS = [("llama3-1b", 4), ("llama3-3b", 4), ("llama3-8b", 4), ("llama3-70b", 4), ("llama3-70b", 8)]
+
+
+def _gemm_time(m, k, n, tp, weight_bytes=0.5):
+    """one weight-sharded GEMM: weights dominate HBM traffic at bs<=16."""
+    t_mem = (k * n / tp) * weight_bytes / HBM_BW
+    t_fl = 2 * m * k * n / tp / PEAK_FLOPS
+    return max(t_mem, t_fl)
+
+
+def _ar_time(nbytes, tp):
+    return AR_BASE + 2 * (tp - 1) * ICI_HOP + nbytes * (tp - 1) / tp / LINK_BW
+
+
+def kernel_rows(cfg, tp, context=500):
+    d, ff = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    act = 2.0  # bf16
+    rows = []
+
+    # --- fused GEMM + all-reduce (attn o-proj and mlp down-proj) ----------
+    for tag, (k_dim, n_dim) in (("attn", (hq * hd, d)), ("mlp", (ff, d))):
+        t_gemm = _gemm_time(BS, k_dim, n_dim, tp)
+        t_ar = _ar_time(BS * d * act, tp)
+        unfused = t_gemm + OP_OVERHEAD + t_ar + OP_OVERHEAD + 2 * BS * d * act / HBM_BW
+        fused = max(t_gemm, t_ar) + OP_OVERHEAD  # transfer rides the GEMM
+        rows.append([cfg.name, tp, f"fused_gemm_ar_{tag}", round(unfused * 1e6, 2),
+                     round(fused * 1e6, 2), round(unfused / fused, 2)])
+
+    # --- attention: split-KV single kernel vs two-kernel combine ----------
+    kv_bytes = 2 * context * hkv * hd * act / tp
+    t_core = max(kv_bytes / HBM_BW, 4 * BS * context * hq * hd / tp / PEAK_FLOPS)
+    n_splits = 4
+    partial_bytes = n_splits * BS * hq * hd * 4 * 3 / tp  # (max,sum,acc) f32
+    unfused = t_core + OP_OVERHEAD + 2 * partial_bytes / HBM_BW + OP_OVERHEAD
+    fused = t_core + OP_OVERHEAD
+    rows.append([cfg.name, tp, f"attn_ctx{context}", round(unfused * 1e6, 2),
+                 round(fused * 1e6, 2), round(unfused / fused, 2)])
+
+    # --- SwiGLU ------------------------------------------------------------
+    t_w = 2 * d * ff / tp * 0.5 / HBM_BW  # wg+wu int4
+    t_x2 = 2 * BS * d * act / HBM_BW  # x read twice
+    t_gu = 4 * BS * ff / tp * act / HBM_BW  # g,u round trip
+    t_fl = 2 * 2 * BS * d * ff / tp / PEAK_FLOPS
+    unfused = max(t_w + t_x2 + t_gu, t_fl) + 3 * OP_OVERHEAD
+    fused = max(t_w + t_x2 / 2, t_fl) + OP_OVERHEAD
+    rows.append([cfg.name, tp, "swiglu", round(unfused * 1e6, 2),
+                 round(fused * 1e6, 2), round(unfused / fused, 2)])
+    return rows
+
+
+def utilization_rows(cfg, tp, context=500):
+    """Paper Table 3: per-op bandwidth/compute utilization at bs=8 — the
+    'everything is latency-bound' observation."""
+    d, ff, hq, hkv, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = []
+    ops = {
+        "qkv_proj": (_gemm_time(BS, d, (hq + 2 * hkv) * hd, tp),
+                     d * (hq + 2 * hkv) * hd / tp * 0.5, 2 * BS * d * (hq + 2 * hkv) * hd / tp),
+        "attention": (max(2 * context * hkv * hd * 2.0 / tp / HBM_BW, 1e-6) + OP_OVERHEAD,
+                      2 * context * hkv * hd * 2.0 / tp, 4 * BS * context * hq * hd / tp),
+        "o_proj": (_gemm_time(BS, hq * hd, d, tp), hq * hd * d / tp * 0.5, 2 * BS * hq * hd * d / tp),
+        "all_reduce": (_ar_time(BS * d * 2.0, tp), BS * d * 2.0, 0),
+        "swiglu": (_gemm_time(BS, d, 2 * ff, tp), 2 * d * ff / tp * 0.5, 4 * BS * d * ff / tp),
+        "down_proj": (_gemm_time(BS, ff, d, tp), ff * d / tp * 0.5, 2 * BS * ff * d / tp),
+    }
+    for name, (t, nbytes, flops) in ops.items():
+        t = t + OP_OVERHEAD
+        bw_util = nbytes / t / (LINK_BW if name == "all_reduce" else HBM_BW)
+        fl_util = flops / t / PEAK_FLOPS
+        out.append([cfg.name, tp, name, round(t * 1e6, 2), round(100 * fl_util, 2),
+                    round(100 * bw_util, 1)])
+    return out
+
+
+def run():
+    rows7, rows3 = [], []
+    for name, tp in CONFIGS:
+        cfg = get_config(name)
+        rows7 += kernel_rows(cfg, tp)
+    cfg70 = get_config("llama3-70b")
+    rows3 += utilization_rows(cfg70, tp=4)
+
+    p7 = write_csv("table7_kernel_micro.csv",
+                   ["model", "tp", "kernel", "unfused_us", "fused_us", "speedup"], rows7)
+    p3 = write_csv("table3_op_utilization.csv",
+                   ["model", "tp", "op", "time_us", "compute_util_%", "bandwidth_util_%"], rows3)
+
+    import collections
+    by_kernel = collections.defaultdict(list)
+    for r in rows7:
+        by_kernel[r[2].split("_ctx")[0]].append(r[5])
+    for k, v in by_kernel.items():
+        print(f"  {k:22s} mean fusion speedup {sum(v)/len(v):.2f}x over {len(v)} configs")
+    # Table 3, TPU-adapted: on H800 EVERY op is latency-bound at bs=8 (<50%
+    # util) because of per-kernel launches + NCCL sync.  On TPU the weight
+    # GEMMs saturate HBM (one fused program, 4x lower BW than H800), while
+    # attention and all-reduce REMAIN latency-bound — they are exactly the
+    # ops our fused kernels attack.
+    util = {r[2]: r[5] for r in rows3}
+    assert util["attention"] < 30 and util["all_reduce"] < 30, util
+    assert util["qkv_proj"] > 60 and util["down_proj"] > 60, util
+    print(f"  TPU adaptation: GEMMs HBM-saturated ({util['qkv_proj']:.0f}%/{util['down_proj']:.0f}%), "
+          f"attention/all-reduce latency-bound ({util['attention']:.0f}%/{util['all_reduce']:.0f}%); {p3}")
+    return p7
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Paper Table 6 — parallel vs serial tree generation: compression ratio per
+dataset, draft/target step times, end-to-end decoding speed.
+
+Regime: MEASURED dynamics + DERIVED schedule.  Compression ratios and round
+counts are measured with the real engine on six synthetic "datasets" (Markov
+streams of varying peakedness standing in for ALP/GSM/HE/MT/QA/SUM — no
+public datasets offline); the decoding speed combines the measured ratios
+with roofline step times for the paper's Qwen2-72B/1.5B pair under the
+paper's split (serial: both tp8; parallel: target tp6 + draft tp2).
+
+Claims reproduced: parallel compression ≈ 0.9x serial (the async tree loses
+a little), end-to-end tokens/s gains ~1.3-1.5x from overlap."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecConfig, SpecEngine
+
+from benchmarks.common import build_pair, infer_time_model, write_csv
+
+# six synthetic dataset analogues: (name, lm_head peaking) — peakier logits
+# model more predictable text (code/math vs open QA)
+DATASETS = [("ALP", 3.0), ("GSM", 5.0), ("HE", 6.0), ("MT", 3.5), ("QA", 2.5), ("SUM", 4.0)]
+
+# paper pair: Qwen2-72B target + Qwen2-1.5B draft (public shapes)
+QWEN72 = ModelConfig(name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64,
+                     n_kv_heads=8, d_ff=29568, vocab_size=152064, qkv_bias=True)
+QWEN15 = ModelConfig(name="qwen2-1.5b", n_layers=28, d_model=1536, n_heads=12,
+                     n_kv_heads=2, d_ff=8960, vocab_size=151936, qkv_bias=True)
+
+
+def measure_ratios(mode: str):
+    out = {}
+    for name, peak in DATASETS:
+        cfgT, cfgD, T, D, tp, dp = build_pair(peak=peak)
+        eng = SpecEngine(T, T, SpecConfig(bs=8, w=4, c=2, d=2, mode=mode, max_new=32),
+                         512, 512)
+        prompt = (np.arange(1, 9, dtype=np.int32) % 100).reshape(1, 8)
+        _, stats = eng.generate(tp, tp, prompt)
+        out[name] = stats.compression_ratio
+    return out
+
+
+def run():
+    # measured engine dynamics
+    r_serial = measure_ratios("serial")
+    r_par = measure_ratios("parallel")
+
+    # derived step times under the paper's allocations
+    t_target_par, _ = infer_time_model(QWEN72, tp=6, bs=8, context=512)
+    t_draft_par, _ = infer_time_model(QWEN15, tp=2, bs=8, context=512)
+    t_target_ser, _ = infer_time_model(QWEN72, tp=8, bs=8, context=512)
+    t_draft_ser, _ = infer_time_model(QWEN15, tp=8, bs=8, context=512)
+    d = max(1, int(t_target_par / t_draft_par))  # paper §3.1 depth rule
+    sync = 20e-6
+
+    rows = []
+    speeds = {}
+    for name, _ in DATASETS:
+        # serial round: target + d draft expansions, sequential
+        t_round_ser = t_target_ser + d * t_draft_ser + sync
+        # parallel round: drafting hides under verification
+        t_round_par = max(t_target_par, d * t_draft_par) + sync
+        tps_ser = r_serial[name] / t_round_ser
+        tps_par = r_par[name] / t_round_par
+        speeds[name] = (tps_ser, tps_par)
+        rows.append([name, round(r_serial[name], 3), round(r_par[name], 3),
+                     round(t_round_ser * 1e3, 3), round(t_round_par * 1e3, 3),
+                     round(tps_ser, 1), round(tps_par, 1),
+                     round(tps_par / tps_ser, 3)])
+
+    path = write_csv(
+        "table6_parallel_vs_serial.csv",
+        ["dataset", "compression_serial", "compression_parallel",
+         "round_ms_serial", "round_ms_parallel", "tok_s_serial", "tok_s_parallel", "speedup"],
+        rows,
+    )
+    ratio_drop = np.mean([r_par[n] / r_serial[n] for n, _ in DATASETS])
+    speedup = np.mean([p / s for s, p in speeds.values()])
+    print(f"  d={d}; t_target(tp6)={t_target_par*1e3:.2f}ms t_draft(tp2)={t_draft_par*1e3:.2f}ms")
+    print(f"  compression parallel/serial = {ratio_drop:.2f} (paper: ~0.91)")
+    print(f"  mean e2e speedup parallel vs serial = {speedup:.2f}x (paper: 1.37x for Qwen2); {path}")
+    assert 0.6 <= ratio_drop <= 1.05, ratio_drop
+    assert speedup > 1.1, speedup
+    return path
+
+
+if __name__ == "__main__":
+    run()

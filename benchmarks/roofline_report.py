@@ -1,0 +1,85 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir benchmarks/results/dryrun]
+  PYTHONPATH=src python -m benchmarks.roofline_report --compare benchmarks/results/dryrun_baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath, mesh):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(dirpath, mesh, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def table(recs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | status | t_compute (s) | t_memory (s) | t_collective (s) "
+             "| bottleneck | useful frac | roofline frac | mem/dev (GiB) | compile (s) |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | skip — sub-quadratic-only shape | | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | FAIL | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        gib = r["memory"]["peak_bytes_per_device"] / 2**30
+        lines.append(
+            f"| {arch} | {shape} | ok | {fmt(rf['t_compute_s'])} | {fmt(rf['t_memory_s'])} | "
+            f"{fmt(rf['t_collective_s'])} | {rf['bottleneck']} | {rf['useful_fraction']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} | {gib:.2f} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def compare_table(new, old, cells):
+    lines = ["| cell | term | baseline | optimized | delta |", "|---|---|---|---|---|"]
+    for arch, shape in cells:
+        a, b = old.get((arch, shape)), new.get((arch, shape))
+        if not a or not b or a["status"] != "ok" or b["status"] != "ok":
+            continue
+        for term in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            ov, nv = a["roofline"][term], b["roofline"][term]
+            d = (ov / nv) if nv else float("inf")
+            lines.append(f"| {arch} × {shape} | {term} | {fmt(ov)} | {fmt(nv)} | {d:.2f}x |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--compare", default="")
+    ap.add_argument("--cells", default="")
+    args = ap.parse_args()
+
+    for mesh, name in (("pod1", "single-pod 16×16 (256 chips)"),
+                       ("pod2", "multi-pod 2×16×16 (512 chips)")):
+        recs = load(args.dir, mesh)
+        if recs:
+            print(table(recs, f"{name}"))
+            print()
+    if args.compare:
+        old = load(args.compare, "pod1")
+        new = load(args.dir, "pod1")
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")] if args.cells else \
+            [("deepseek-coder-33b", "decode_32k"), ("rwkv6-7b", "train_4k"),
+             ("llama-3.2-vision-90b", "train_4k")]
+        print("### baseline vs optimized (hillclimbed cells)\n")
+        print(compare_table(new, old, cells))
+
+
+if __name__ == "__main__":
+    main()

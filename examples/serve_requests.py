@@ -1,0 +1,14 @@
+"""Serve a stream of requests end to end (deliverable (b), serving kind):
+profile pass -> engine -> batched request stream -> per-request stats.
+
+  PYTHONPATH=src python examples/serve_requests.py [--requests 4]
+
+This drives the same launch/serve.py production path used at scale; on this
+CPU container both device groups share one device (correctness only)."""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--requests", "3", "--max-new", "32", "--mode", "parallel"])

@@ -1,0 +1,20 @@
+"""End-to-end training driver example: ~100M-class model, a few hundred
+steps, checkpoints + resume (deliverable (b), training kind).
+
+  PYTHONPATH=src python examples/train_smoke.py [--steps 200]
+
+Uses the same launch/train.py path the dry-run lowers at production scale
+(scan-over-layers, AdamW with f32 masters, deterministic data)."""
+
+import sys
+import tempfile
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not args:
+        ckpt = tempfile.mkdtemp(prefix="repro-ckpt-")
+        args = ["--arch", "qwen2.5-14b", "--steps", "200", "--batch", "8",
+                "--seq", "128", "--lr", "3e-3", "--ckpt", ckpt, "--ckpt-every", "50"]
+    main(args)

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ASSIGNED,
+    PAPER_OWN,
+    SHAPES,
+    ModelConfig,
+    ShapeCell,
+    all_arch_names,
+    cell_applicable,
+    get_config,
+    resolve_for_tp,
+)
+
+__all__ = [
+    "ASSIGNED",
+    "PAPER_OWN",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeCell",
+    "all_arch_names",
+    "cell_applicable",
+    "get_config",
+    "resolve_for_tp",
+]

@@ -1,0 +1,257 @@
+"""SpecEngine — asynchronous, disaggregated speculative decoding (paper §3.1,
+Algorithm 1, Figure 3).
+
+The draft model lives on one device group (submesh), the target on another.
+JAX's asynchronous dispatch makes the two jitted programs run concurrently on
+disjoint device sets: the verify step for round n is enqueued first, then the
+d draft-tree expansions for round n+1 are enqueued on the draft group; the
+host blocks only on the tiny verified-token transfer (the paper's NCCL
+exchange).  ``mode="serial"`` is the SwiftSpec-base baseline (expand, then
+verify, no overlap).
+
+Greedy-verification invariant: the emitted stream equals target-only greedy
+decoding token-for-token (tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv as kvm
+from repro.core import tree as T
+from repro.sharding import use_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    bs: int = 8  # target verification batch (paper §5.5: 8)
+    w: int = 4  # draft leaves expanded per step (paper §5.5: 8)
+    c: int = 2  # children proposed per expanded leaf
+    d: int = 3  # tree expansions per round (profiled: ~t_target/t_draft)
+    n_cap: int = 64  # tree node capacity
+    mode: str = "parallel"  # "parallel" | "serial"
+    max_new: int = 64
+    eos_id: int = -1  # -1: never stop early
+    draft_bypass: bool = False  # straggler mitigation: verify root-only chain
+
+
+@dataclasses.dataclass
+class SpecStats:
+    rounds: int = 0
+    emitted: int = 0
+    accepted: int = 0
+    draft_steps: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_round(self) -> float:
+        return self.emitted / max(self.rounds, 1)
+
+    @property
+    def compression_ratio(self) -> float:
+        """Paper's metric: tokens per target-model inference."""
+        return self.tokens_per_round
+
+
+class SpecEngine:
+    """Tree-based speculative decoding for attention architectures."""
+
+    def __init__(self, target, draft, cfg: SpecConfig, S_max_t: int, S_max_d: int,
+                 mesh_target=None, mesh_draft=None):
+        self.target, self.draft, self.cfg = target, draft, cfg
+        self.S_max_t, self.S_max_d = S_max_t, S_max_d
+        self.mesh_target, self.mesh_draft = mesh_target, mesh_draft
+        window = target.cfg.sliding_window
+        c = cfg
+
+        # ----- jitted draft-side steps ------------------------------------
+        def expand(dparams, tr, dcache):
+            leaf_ids, leaf_valid = jax.vmap(lambda t: T.select_leaves(t, c.w))(tr)
+            tokens, rows, positions, mask, _ = jax.vmap(
+                lambda t, li, lv: T.leaf_inputs(t, li, lv, S_max_d, draft.cfg.sliding_window)
+            )(tr, leaf_ids, leaf_valid)
+            logits, dcache = draft.spec_forward(dparams, dcache, tokens, positions, rows, mask)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            top_lp, top_tok = jax.lax.top_k(lp, c.c)  # [B,w,c]
+            tr = jax.vmap(T.insert_children)(tr, leaf_ids, leaf_valid, rows, top_tok, top_lp)
+            return tr, dcache
+
+        def select_plan(tr):
+            return jax.vmap(lambda t: T.select_batch(t, c.bs, S_max_t, window))(tr)
+
+        def reroot_fill(dparams, tr, dcache, node_ids, acc_pos, n_acc, bonus):
+            tr, move, fill = jax.vmap(T.reroot)(tr, node_ids, acc_pos, n_acc, bonus)
+            dcache = kvm.apply_moves(dcache, move.src, move.dst, move.mask)
+            dcache = kvm.set_length(dcache, 0)  # length bookkeeping via tree.plen
+            # fill missing prefix KV (accepted-but-unexpanded tokens)
+            cols = jnp.arange(S_max_d, dtype=jnp.int32)
+            fmask = (cols[None, None, :] <= fill.rows[:, :, None]) & fill.mask[:, :, None]
+            _, dcache = draft.spec_forward(
+                dparams, dcache, fill.tokens, fill.positions, fill.rows, fmask
+            )
+            return tr, dcache
+
+        def seed(tr, root_tok, plen, root_logits):
+            return jax.vmap(lambda t, tok, lg: T.seed_root(t, tok, plen, lg, c.c))(
+                tr, root_tok, root_logits
+            )
+
+        # ----- jitted target-side steps -------------------------------------
+        def verify(tparams, tcache, tokens, positions, rows, mask, parent_pos, valid):
+            logits, tcache = self.target.spec_forward(tparams, tcache, tokens, positions, rows, mask)
+            argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            acc_pos, n_acc, bonus, emitted, n_emitted = jax.vmap(T.verify_walk)(
+                tokens, parent_pos, valid, argmax
+            )
+            # compact: accepted rows -> prefix  (target Fig.5 analogue)
+            bs = tokens.shape[1]
+            plen = rows[:, 0] + 1  # root row = plen-1
+            src = jnp.where(acc_pos >= 0, jnp.take_along_axis(rows, jnp.maximum(acc_pos, 0), axis=1), -1)
+            dst = plen[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+            mmask = (jnp.arange(bs)[None, :] < n_acc[:, None]) & (src >= 0)
+            tcache = kvm.apply_moves(tcache, src, dst, mmask)
+            return acc_pos, n_acc, bonus, emitted, n_emitted, tcache
+
+        self._expand = jax.jit(expand, donate_argnums=(1, 2))
+        self._select_plan = jax.jit(select_plan)
+        self._reroot_fill = jax.jit(reroot_fill, donate_argnums=(1, 2))
+        self._seed = jax.jit(seed, static_argnums=(2,))
+        self._verify = jax.jit(verify, donate_argnums=(1,))
+        self._dprefill = jax.jit(lambda p, t, S: draft.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
+        self._tprefill = jax.jit(lambda p, t, S: target.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
+
+    # ---------------------------------------------------------------------
+    def generate(self, tparams, dparams, prompt, max_new=None, collect_stats=True):
+        """prompt: np.ndarray [B, P] int32. Returns (tokens [B, <=max_new] list, stats)."""
+        c = self.cfg
+        max_new = max_new or c.max_new
+        B, P = prompt.shape
+        t0 = time.perf_counter()
+
+        with use_mesh(self.mesh_draft):
+            dlogits, dcache = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
+        with use_mesh(self.mesh_target):
+            _, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
+
+        t0tree = T.init_tree(c.n_cap)
+        tr = jax.tree.map(lambda x: jnp.stack([x] * B), t0tree)
+        root_tok = jnp.asarray(prompt[:, -1], jnp.int32)
+        with use_mesh(self.mesh_draft):
+            tr = self._seed(tr, root_tok, P, dlogits[:, -1, :])
+            # initial growth to >= bs nodes
+            g0 = max(1, -(-(c.bs) // (c.w * c.c)))
+            for _ in range(g0):
+                tr, dcache = self._expand(dparams, tr, dcache)
+            plan = self._select_plan(tr)
+
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        stats = SpecStats()
+        rounds_cap = max_new + 2  # greedy emits >=1 token/round
+
+        for _ in range(rounds_cap):
+            if done.all() or (P + stats.emitted + 2 * c.bs) >= min(self.S_max_t, self.S_max_d):
+                break
+            if c.draft_bypass:
+                plan = self._bypass(plan)
+            # --- dispatch verification on the target group (async) ---------
+            with use_mesh(self.mesh_target):
+                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
+                    tparams, tcache, plan.tokens, plan.positions, plan.rows,
+                    plan.mask, plan.parent_pos, plan.valid,
+                )
+            # --- concurrently: d tree expansions on the draft group --------
+            if c.mode == "parallel":
+                with use_mesh(self.mesh_draft):
+                    for _ in range(c.d):
+                        tr, dcache = self._expand(dparams, tr, dcache)
+                    stats.draft_steps += c.d
+            # --- sync point: verified tokens cross groups (host-mediated) --
+            emitted_h = np.asarray(jax.device_get(emitted))
+            n_emitted_h = np.asarray(jax.device_get(n_emitted))
+            for b in range(B):
+                if not done[b]:
+                    toks = emitted_h[b, : n_emitted_h[b]].tolist()
+                    for t in toks:
+                        out[b].append(int(t))
+                        if (c.eos_id >= 0 and t == c.eos_id) or len(out[b]) >= max_new:
+                            done[b] = True
+                            break
+            stats.rounds += 1
+            stats.emitted += int(n_emitted_h.sum()) // max(B, 1)
+            stats.accepted += int(np.asarray(jax.device_get(n_acc)).sum()) // max(B, 1)
+
+            # --- re-root, fill, grow, select next batch (draft group) ------
+            with use_mesh(self.mesh_draft):
+                tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
+                n_grow = c.d if c.mode == "serial" else max(1, -(-(c.bs) // (c.w * c.c)))
+                for _ in range(n_grow):
+                    tr, dcache = self._expand(dparams, tr, dcache)
+                stats.draft_steps += n_grow
+                plan = self._select_plan(tr)
+
+        stats.wall_s = time.perf_counter() - t0
+        return out, stats
+
+    def profile(self, tparams, dparams, prompt, iters: int = 3):
+        """Paper §5.5 profile pass: wall-time one draft expansion and one
+        target verification (jits warmed first).  Returns ProfileResult."""
+        from repro.core.scheduler import ProfileResult
+
+        c = self.cfg
+        B, P = prompt.shape
+        with use_mesh(self.mesh_draft):
+            dlogits, dcache = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
+        with use_mesh(self.mesh_target):
+            _, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
+        t0tree = T.init_tree(c.n_cap)
+        tr = jax.tree.map(lambda x: jnp.stack([x] * B), t0tree)
+        with use_mesh(self.mesh_draft):
+            tr = self._seed(tr, jnp.asarray(prompt[:, -1], jnp.int32), P, dlogits[:, -1, :])
+            tr, dcache = self._expand(dparams, tr, dcache)  # warm
+            plan = self._select_plan(tr)
+
+        def draft_once():
+            nonlocal tr, dcache
+            with use_mesh(self.mesh_draft):
+                tr, dcache = self._expand(dparams, tr, dcache)
+                jax.block_until_ready(tr.tokens)
+
+        def target_once():
+            nonlocal tcache
+            with use_mesh(self.mesh_target):
+                out = self._verify(tparams, tcache, plan.tokens, plan.positions,
+                                   plan.rows, plan.mask, plan.parent_pos, plan.valid)
+                tcache = out[-1]
+                jax.block_until_ready(out[0])
+
+        target_once()  # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            draft_once()
+        t_d = (time.perf_counter() - t0) / iters
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            target_once()
+        t_t = (time.perf_counter() - t0) / iters
+        return ProfileResult(t_draft_s=t_d, t_target_s=t_t)
+
+    def _bypass(self, plan):
+        """Straggler mitigation: degenerate to root-only verification."""
+        keep = jnp.arange(plan.tokens.shape[1]) == 0
+        return T.BatchPlan(
+            node_ids=plan.node_ids,
+            tokens=plan.tokens,
+            rows=jnp.where(keep[None, :], plan.rows, -1),
+            positions=plan.positions,
+            mask=plan.mask & keep[None, :, None],
+            parent_pos=plan.parent_pos,
+            valid=plan.valid & keep[None, :],
+        )

@@ -1,0 +1,49 @@
+"""KV-cache reorganization (paper §3.2): apply re-root MovePlans and
+verification compaction to model caches while preserving the
+``[prefix | tree]`` layout invariant.
+
+All moves are gather-then-scatter on the functional cache (sources are read
+from the pre-move cache in full before any write), so overlapping src/dst
+rows are safe by construction.  Row ops touch only attention-cache leaves
+("k"/"v"/"ckv"/"krope"); SSM states and cross-encoder KV are structurally
+exempt (chain mode / static).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import gather_rows, scatter_rows
+
+ROW_KEYS = ("k", "v", "ckv", "krope")
+
+
+def map_row_leaves(cache, fn):
+    """Apply ``fn`` to every row-indexed cache leaf [U, B, S, ...]."""
+
+    def rec(x):
+        if isinstance(x, dict):
+            return {k: (fn(v) if k in ROW_KEYS else rec(v)) for k, v in x.items()}
+        if isinstance(x, (list, tuple)):
+            return type(x)(rec(v) for v in x)
+        return x
+
+    return {"len": cache["len"], "groups": rec(cache["groups"])}
+
+
+def apply_moves(cache, src, dst, mask):
+    """src/dst/mask: [B, M] row move plan (vmapped over the layer stack)."""
+
+    def one_layer(arr):  # arr: [B, S, ...]
+        rows = gather_rows(arr, jnp.maximum(src, 0))
+        return scatter_rows(arr, rows, dst, mask & (src >= 0))
+
+    def per_leaf(arr):  # [U, B, S, ...]
+        return jax.vmap(one_layer)(arr)
+
+    return map_row_leaves(cache, per_leaf)
+
+
+def set_length(cache, new_len):
+    return {**cache, "len": jnp.asarray(new_len, jnp.int32)}

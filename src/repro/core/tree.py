@@ -1,0 +1,459 @@
+"""The draft tree: fixed-shape, jittable algebra for parallel tree generation
+(paper §3.1) and consistent KV-cache management (§3.2).
+
+Layout invariant (paper Fig. 5): cache rows [0, plen) hold the verified
+tokens' KV — the *prefix cache* — with the tree ROOT's token at row plen-1;
+rows [plen, ...) hold tree-node KV — the *tree cache* — allocated
+monotonically and re-compacted at every re-root.
+
+Node invariants:
+  * node 0 is always the root (re-root compacts indices);
+  * ``expanded`` ⟺ the node has been fed through the draft model, i.e. its
+    KV exists at ``kv_row`` AND its children have been proposed;
+  * every strict ancestor of any node is expanded (children only appear at
+    expansion), so any unexpanded node can be expanded directly;
+  * ``weight`` = cumulative log-prob root→node (root 0.0), monotonically
+    non-increasing along paths — hence a stable sort by weight is
+    automatically ancestor-closed (the paper's max-likelihood subgraph).
+
+All functions are single-request; the engine vmaps them over the request
+batch.  Capacities (n_cap, w, c, bs) are static.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+class Tree(NamedTuple):
+    tokens: jax.Array  # i32[N]
+    parent: jax.Array  # i32[N], -1 for root
+    logp: jax.Array  # f32[N]
+    weight: jax.Array  # f32[N] cum logp from root
+    depth: jax.Array  # i32[N], root=0
+    valid: jax.Array  # bool[N]
+    expanded: jax.Array  # bool[N]
+    kv_row: jax.Array  # i32[N] absolute cache row of node KV (-1 missing)
+    n_nodes: jax.Array  # i32 scalar
+    plen: jax.Array  # i32 scalar, prefix length (root token at row plen-1)
+    next_row: jax.Array  # i32 scalar, next free tree-cache row
+
+
+class BatchPlan(NamedTuple):
+    """Inputs for one target verification forward (paper Alg. 1 line 12)."""
+
+    node_ids: jax.Array  # i32[bs] tree node per batch slot (slot 0 = root)
+    tokens: jax.Array  # i32[bs]
+    rows: jax.Array  # i32[bs] target cache rows (plen-1 + slot)
+    positions: jax.Array  # i32[bs] rope positions
+    mask: jax.Array  # bool[bs, S_max] target attention mask
+    parent_pos: jax.Array  # i32[bs] batch slot of parent (-1 for root)
+    valid: jax.Array  # bool[bs]
+
+
+class MovePlan(NamedTuple):
+    """KV row moves for re-root compaction (applied by core/kv.py)."""
+
+    src: jax.Array  # i32[M]
+    dst: jax.Array  # i32[M]
+    mask: jax.Array  # bool[M]
+
+
+class FillPlan(NamedTuple):
+    """Accepted-but-never-expanded tokens whose prefix KV must be computed."""
+
+    tokens: jax.Array  # i32[F]
+    rows: jax.Array  # i32[F]
+    positions: jax.Array  # i32[F]
+    mask: jax.Array  # bool[F] (any() -> a draft fill forward is needed)
+
+
+# -----------------------------------------------------------------------------
+# construction
+# -----------------------------------------------------------------------------
+
+
+def init_tree(n_cap: int) -> Tree:
+    z = jnp.zeros((n_cap,), jnp.int32)
+    return Tree(
+        tokens=z,
+        parent=jnp.full((n_cap,), -1, jnp.int32),
+        logp=jnp.zeros((n_cap,), jnp.float32),
+        weight=jnp.full((n_cap,), NEG, jnp.float32),
+        depth=z,
+        valid=jnp.zeros((n_cap,), bool),
+        expanded=jnp.zeros((n_cap,), bool),
+        kv_row=jnp.full((n_cap,), -1, jnp.int32),
+        n_nodes=jnp.zeros((), jnp.int32),
+        plen=jnp.zeros((), jnp.int32),
+        next_row=jnp.zeros((), jnp.int32),
+    )
+
+
+def seed_root(tree: Tree, token, plen, root_logits, c: int) -> Tree:
+    """Root = last verified token (KV at row plen-1, produced by prefill);
+    children proposed from the prefill logits — root starts expanded."""
+    n_cap = tree.tokens.shape[0]
+    lp = jax.nn.log_softmax(root_logits.astype(jnp.float32))
+    top_lp, top_tok = jax.lax.top_k(lp, c)
+    t = tree
+    t = t._replace(
+        tokens=t.tokens.at[0].set(token),
+        parent=t.parent.at[0].set(-1),
+        logp=t.logp.at[0].set(0.0),
+        weight=t.weight.at[0].set(0.0),
+        depth=t.depth.at[0].set(0),
+        valid=t.valid.at[0].set(True),
+        expanded=t.expanded.at[0].set(True),
+        kv_row=t.kv_row.at[0].set(plen - 1),
+        n_nodes=jnp.asarray(1 + c, jnp.int32),
+        plen=jnp.asarray(plen, jnp.int32),
+        next_row=jnp.asarray(plen, jnp.int32),
+    )
+    idx = 1 + jnp.arange(c)
+    t = t._replace(
+        tokens=t.tokens.at[idx].set(top_tok),
+        parent=t.parent.at[idx].set(0),
+        logp=t.logp.at[idx].set(top_lp),
+        weight=t.weight.at[idx].set(top_lp),
+        depth=t.depth.at[idx].set(1),
+        valid=t.valid.at[idx].set(idx < n_cap),
+        expanded=t.expanded.at[idx].set(False),
+        kv_row=t.kv_row.at[idx].set(-1),
+    )
+    return t
+
+
+# -----------------------------------------------------------------------------
+# ancestors / masks
+# -----------------------------------------------------------------------------
+
+
+def ancestor_matrix(tree: Tree) -> jax.Array:
+    """anc[i, j] = True iff j is an ancestor-or-self of i (valid nodes)."""
+    n = tree.tokens.shape[0]
+
+    def body(_, state):
+        anc, cur = state
+        anc = anc | (jax.nn.one_hot(cur, n, dtype=jnp.int32) > 0) & (cur >= 0)[:, None]
+        cur = jnp.where(cur >= 0, tree.parent[jnp.maximum(cur, 0)], -1)
+        return anc, cur
+
+    anc0 = jnp.zeros((n, n), bool)
+    cur0 = jnp.arange(n, dtype=jnp.int32)
+    anc, _ = jax.lax.fori_loop(0, n, body, (anc0, cur0))
+    return anc & tree.valid[None, :] & tree.valid[:, None]
+
+
+def rows_mask(tree: Tree, ids, ids_valid, own_rows, S_max: int, window: int = 0):
+    """Non-square attention mask [k, S_max] for draft nodes ``ids``:
+    prefix rows [0, plen) + tree-ancestor rows + own row (self-attention).
+
+    ``window``: sliding-window constraint applied to prefix rows (tree depths
+    are far below any realistic window)."""
+    k = ids.shape[0]
+    cols = jnp.arange(S_max, dtype=jnp.int32)
+    anc = ancestor_matrix(tree)[jnp.maximum(ids, 0)]  # [k, N]
+    anc &= ids_valid[:, None]
+    # map ancestor nodes -> their cache rows (root row plen-1 is in prefix,
+    # already covered, but harmless to re-mark)
+    row_of = tree.kv_row  # [N]
+    has_kv = row_of >= 0
+    onehot = (row_of[None, :, None] == cols[None, None, :]) & has_kv[None, :, None]
+    m_tree = jnp.einsum("kn,xns->ks", anc.astype(jnp.int32), onehot.astype(jnp.int32)) > 0
+    m_prefix = cols[None, :] < tree.plen
+    if window:
+        q_pos = tree.plen - 1 + tree.depth[jnp.maximum(ids, 0)]
+        m_prefix &= cols[None, :] > (q_pos[:, None] - window)
+    m_self = cols[None, :] == own_rows[:, None]
+    return (m_prefix | m_tree | (m_self & ids_valid[:, None])) & ids_valid[:, None]
+
+
+# -----------------------------------------------------------------------------
+# expansion (paper Alg. 1 lines 3-4, §3.1 maximum-likelihood tree expansion)
+# -----------------------------------------------------------------------------
+
+
+def select_leaves(tree: Tree, w: int):
+    """Top-w most probable unexpanded nodes (the priority-queue pop)."""
+    score = jnp.where(tree.valid & ~tree.expanded, tree.weight, NEG)
+    top, ids = jax.lax.top_k(score, w)
+    return ids.astype(jnp.int32), top > NEG / 2
+
+
+def leaf_inputs(tree: Tree, leaf_ids, leaf_valid, S_max: int, window: int = 0):
+    """Model inputs for expanding ``leaf_ids``.
+
+    Returns (tokens[w], rows[w], positions[w], mask[w,S_max], new_next_row).
+    Root (node 0) writes its KV at prefix row plen-1; other leaves get fresh
+    tree-cache rows.
+    """
+    w = leaf_ids.shape[0]
+    is_root = leaf_ids == 0
+    non_root = leaf_valid & ~is_root
+    rank = jnp.cumsum(non_root.astype(jnp.int32)) - 1
+    rows = jnp.where(
+        is_root,
+        tree.plen - 1,
+        jnp.where(non_root, tree.next_row + rank, -1),
+    ).astype(jnp.int32)
+    rows = jnp.where(rows < S_max, rows, -1)  # cache overflow -> skip
+    new_next_row = tree.next_row + jnp.sum(non_root & (rows >= 0))
+    tokens = jnp.where(leaf_valid, tree.tokens[jnp.maximum(leaf_ids, 0)], 0)
+    positions = jnp.where(
+        leaf_valid, tree.plen - 1 + tree.depth[jnp.maximum(leaf_ids, 0)], 0
+    ).astype(jnp.int32)
+    mask = rows_mask(tree, leaf_ids, leaf_valid & (rows >= 0), rows, S_max, window)
+    return tokens, rows, positions, mask, new_next_row
+
+
+def insert_children(tree: Tree, leaf_ids, leaf_valid, rows, child_tokens, child_logp) -> Tree:
+    """Commit one expansion: mark leaves expanded (KV at ``rows``), append
+    w*c children with cumulative weights.  Children beyond capacity drop."""
+    n_cap = tree.tokens.shape[0]
+    w, c = child_tokens.shape
+    ok = leaf_valid & (rows >= 0)
+    t = tree._replace(
+        expanded=jnp.where(
+            jnp.any(jnp.arange(n_cap)[None, :] == jnp.where(ok, leaf_ids, -2)[:, None], axis=0),
+            True,
+            tree.expanded,
+        ),
+        kv_row=scatter_i32(tree.kv_row, leaf_ids, rows, ok),
+        next_row=tree.next_row + jnp.sum(ok & (leaf_ids != 0)),
+    )
+    # flatten children
+    pl = jnp.repeat(jnp.where(ok, leaf_ids, 0), c)  # parent ids [w*c]
+    pv = jnp.repeat(ok, c)
+    ct = child_tokens.reshape(-1)
+    cl = child_logp.reshape(-1).astype(jnp.float32)
+    cw = t.weight[pl] + cl
+    cd = t.depth[pl] + 1
+    slot_rank = jnp.cumsum(pv.astype(jnp.int32)) - 1
+    slots = jnp.where(pv, t.n_nodes + slot_rank, n_cap)  # n_cap = drop bucket
+    fits = slots < n_cap
+    keep = pv & fits
+    slots_c = jnp.minimum(slots, n_cap - 1)
+    t = t._replace(
+        tokens=scatter_i32(t.tokens, slots_c, ct, keep),
+        parent=scatter_i32(t.parent, slots_c, pl, keep),
+        logp=scatter_f32(t.logp, slots_c, cl, keep),
+        weight=scatter_f32(t.weight, slots_c, cw, keep),
+        depth=scatter_i32(t.depth, slots_c, cd, keep),
+        valid=scatter_bool(t.valid, slots_c, jnp.ones_like(keep), keep),
+        expanded=scatter_bool(t.expanded, slots_c, jnp.zeros_like(keep), keep),
+        kv_row=scatter_i32(t.kv_row, slots_c, jnp.full_like(ct, -1), keep),
+        n_nodes=jnp.minimum(t.n_nodes + jnp.sum(keep), n_cap),
+    )
+    return t
+
+
+def scatter_i32(arr, idx, val, mask):
+    return arr.at[jnp.where(mask, idx, arr.shape[0])].set(val, mode="drop")
+
+
+def scatter_f32(arr, idx, val, mask):
+    return arr.at[jnp.where(mask, idx, arr.shape[0])].set(val.astype(arr.dtype), mode="drop")
+
+
+def scatter_bool(arr, idx, val, mask):
+    return arr.at[jnp.where(mask, idx, arr.shape[0])].set(val, mode="drop")
+
+
+# -----------------------------------------------------------------------------
+# verification batch (paper Alg. 1 line 11-12)
+# -----------------------------------------------------------------------------
+
+
+def select_batch(tree: Tree, bs: int, S_max: int, window: int = 0) -> BatchPlan:
+    """Most probable ancestor-closed subgraph of size bs, topologically
+    ordered (stable weight sort ⇒ parents precede children); slot 0 = root."""
+    n = tree.tokens.shape[0]
+    score = jnp.where(tree.valid, tree.weight, NEG)
+    order = jnp.argsort(-score, stable=True)  # root (weight 0) first
+    node_ids = order[:bs].astype(jnp.int32)
+    valid = tree.valid[node_ids] & (score[node_ids] > NEG / 2)
+    tokens = jnp.where(valid, tree.tokens[node_ids], 0)
+    rows = jnp.where(valid, tree.plen - 1 + jnp.arange(bs, dtype=jnp.int32), -1)
+    positions = jnp.where(valid, tree.plen - 1 + tree.depth[node_ids], 0).astype(jnp.int32)
+    # parent slot: position of parent node id within node_ids
+    par = tree.parent[node_ids]  # [bs]
+    eq = node_ids[None, :] == par[:, None]  # [bs, bs]
+    has = jnp.any(eq, axis=1) & (par >= 0)
+    parent_pos = jnp.where(has, jnp.argmax(eq, axis=1), -1).astype(jnp.int32)
+    # target mask: prefix rows [0, plen-1) + in-batch ancestors (incl. self)
+    anc = ancestor_matrix(tree)[jnp.maximum(node_ids, 0)][:, jnp.maximum(node_ids, 0)]
+    anc &= valid[:, None] & valid[None, :]
+    anc = anc | (jnp.eye(bs, dtype=bool) & valid[:, None])
+    cols = jnp.arange(S_max, dtype=jnp.int32)
+    m_prefix = cols[None, :] < (tree.plen - 1)
+    if window:
+        m_prefix &= cols[None, :] > (positions[:, None] - window)
+    onehot = rows[None, :, None] == cols[None, None, :]
+    m_batch = jnp.einsum("ij,xjs->is", anc.astype(jnp.int32), onehot.astype(jnp.int32)) > 0
+    mask = (m_prefix | m_batch) & valid[:, None]
+    return BatchPlan(node_ids, tokens, rows, positions, mask, parent_pos, valid)
+
+
+# -----------------------------------------------------------------------------
+# greedy verification walk (target side; paper Alg. 1 lines 15-21)
+# -----------------------------------------------------------------------------
+
+
+def verify_walk(plan_tokens, plan_parent_pos, plan_valid, argmax_tokens):
+    """Walk the submitted subgraph under the target's greedy choices.
+
+    Returns (acc_pos i32[bs] batch slots of accepted nodes (-1 pad),
+             n_acc i32, bonus_token i32, emitted i32[bs+1], n_emitted i32).
+    ``emitted`` = accepted tokens then bonus; equals exactly what target-only
+    greedy decoding would produce (the correctness invariant).
+    """
+    bs = plan_tokens.shape[0]
+
+    def step(state, _):
+        cur, alive, acc, n_acc = state
+        nxt = argmax_tokens[cur]
+        is_child = (plan_parent_pos == cur) & plan_valid & (plan_tokens == nxt)
+        found = jnp.any(is_child) & alive
+        child = jnp.argmax(is_child).astype(jnp.int32)
+        acc = jnp.where(found, acc.at[n_acc].set(child), acc)
+        n_acc = n_acc + jnp.where(found, 1, 0)
+        cur = jnp.where(found, child, cur)
+        alive = alive & found
+        return (cur, alive, acc, n_acc), None
+
+    acc0 = jnp.full((bs,), -1, jnp.int32)
+    (cur, alive, acc, n_acc), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.int32), jnp.ones((), bool), acc0, jnp.zeros((), jnp.int32)), None, length=bs
+    )
+    bonus = argmax_tokens[cur]
+    emitted = jnp.full((bs + 1,), -1, jnp.int32)
+    emitted = jnp.where(jnp.arange(bs + 1) < n_acc, jnp.concatenate([plan_tokens[jnp.maximum(acc, 0)], jnp.zeros((1,), jnp.int32)]), -1)
+    emitted = emitted.at[n_acc].set(bonus)
+    n_emitted = n_acc + 1
+    return acc, n_acc, bonus, emitted, n_emitted
+
+
+# -----------------------------------------------------------------------------
+# re-root + compaction (paper §3.2, Fig. 5)
+# -----------------------------------------------------------------------------
+
+
+def reroot(tree: Tree, batch_node_ids, acc_pos, n_acc, bonus):
+    """Re-root at the bonus token; keep the surviving subtree; emit KV plans.
+
+    Returns (tree', MovePlan, FillPlan).
+      MovePlan — draft-cache row moves: accepted-path KV into prefix rows,
+        surviving expanded nodes compacted into the new tree region.
+      FillPlan — accepted tokens whose KV was never computed (unexpanded
+        accepted nodes): one masked draft forward fills them (§3.2 "grows
+        immediately" generalized).
+    """
+    n = tree.tokens.shape[0]
+    bs = batch_node_ids.shape[0]
+    plen_new = tree.plen + n_acc + 1
+
+    # accepted tree nodes, in path order
+    acc_nodes = jnp.where(acc_pos >= 0, batch_node_ids[jnp.maximum(acc_pos, 0)], -1)  # [bs]
+    acc_ok = jnp.arange(bs) < n_acc
+    last_node = jnp.where(n_acc > 0, acc_nodes[jnp.maximum(n_acc - 1, 0)], 0)  # node id of last accepted (root if none)
+
+    # new root: child of last_node carrying the bonus token, if present
+    is_new_root = (tree.parent == last_node) & tree.valid & (tree.tokens == bonus)
+    root_exists = jnp.any(is_new_root)
+    new_root = jnp.where(root_exists, jnp.argmax(is_new_root), -1).astype(jnp.int32)
+
+    # survivors: descendants-or-self of new_root
+    anc = ancestor_matrix(tree)
+    surv = jnp.where(root_exists, anc[:, jnp.maximum(new_root, 0)] & tree.valid, jnp.zeros((n,), bool))
+    surv_nonroot = surv & (jnp.arange(n) != new_root)
+
+    # --- new node index mapping: root -> 0, others ranked by old index -----
+    rank = jnp.cumsum(surv_nonroot.astype(jnp.int32)) - 1  # [n]
+    new_idx = jnp.where(surv_nonroot, 1 + rank, jnp.where(jnp.arange(n) == new_root, 0, -1))
+    m = jnp.sum(surv_nonroot)  # surviving non-root count
+
+    # --- KV row moves ------------------------------------------------------
+    # (1) accepted path nodes with KV -> prefix rows plen + i
+    src_a = jnp.where(acc_ok, tree.kv_row[jnp.maximum(acc_nodes, 0)], -1)
+    dst_a = jnp.where(acc_ok, tree.plen + jnp.arange(bs, dtype=jnp.int32), -1)
+    mask_a = acc_ok & (src_a >= 0)
+    # (2) new root with KV -> prefix row plen_new - 1
+    root_kv = jnp.where(root_exists, tree.kv_row[jnp.maximum(new_root, 0)], -1)
+    src_r = jnp.full((1,), -1, jnp.int32).at[0].set(root_kv)
+    dst_r = jnp.full((1,), -1, jnp.int32).at[0].set(plen_new - 1)
+    mask_r = jnp.array([root_exists]) & (src_r >= 0)
+    # (3) surviving expanded non-root nodes -> compacted tree rows
+    has_kv = surv_nonroot & (tree.kv_row >= 0)
+    kv_rank = jnp.cumsum(has_kv.astype(jnp.int32)) - 1
+    src_s = jnp.where(has_kv, tree.kv_row, -1)
+    dst_s = jnp.where(has_kv, plen_new + kv_rank, -1)
+    move = MovePlan(
+        src=jnp.concatenate([src_a, src_r, src_s]),
+        dst=jnp.concatenate([dst_a, dst_r, dst_s]),
+        mask=jnp.concatenate([mask_a, mask_r, has_kv]),
+    )
+    next_row_new = plen_new + jnp.sum(has_kv)
+
+    # --- fill plan: accepted nodes WITHOUT KV (their new prefix rows) -------
+    fill_tok = jnp.where(acc_ok, tree.tokens[jnp.maximum(acc_nodes, 0)], 0)
+    fill_rows = jnp.where(acc_ok & (src_a < 0), dst_a, -1)
+    fill = FillPlan(
+        tokens=fill_tok,
+        rows=fill_rows,
+        positions=jnp.where(fill_rows >= 0, fill_rows, 0),  # prefix: position == row
+        mask=fill_rows >= 0,
+    )
+
+    # --- rebuild node arrays -------------------------------------------------
+    gather_src = jnp.argsort(jnp.where(new_idx >= 0, new_idx, n), stable=True)  # new -> old
+    live_new = jnp.arange(n) < (1 + m)
+
+    def g(a, fill_val):
+        out = a[gather_src]
+        return jnp.where(live_new, out, jnp.full_like(out, fill_val))
+
+    root_w = jnp.where(root_exists, tree.weight[jnp.maximum(new_root, 0)], 0.0)
+    root_d = jnp.where(root_exists, tree.depth[jnp.maximum(new_root, 0)], 0)
+    new_parent = jnp.where(
+        live_new,
+        jnp.where(
+            jnp.arange(n) == 0,
+            -1,
+            new_idx[jnp.maximum(g(tree.parent, -1), 0)],
+        ),
+        -1,
+    )
+    # kv_row remap: moved rows — accepted/surviving nodes get their dst rows
+    kv_new_row = jnp.full((n,), -1, jnp.int32)
+    kv_new_row = jnp.where(has_kv, dst_s, kv_new_row)  # old-index space
+    kv_root_row = jnp.where(root_exists & (root_kv >= 0), plen_new - 1, -1)
+    kv_new_row = jnp.where(jnp.arange(n) == new_root, kv_root_row, kv_new_row)
+
+    t = Tree(
+        tokens=jnp.where(jnp.arange(n) == 0, bonus, g(tree.tokens, 0)),
+        parent=new_parent,
+        logp=jnp.where(jnp.arange(n) == 0, 0.0, g(tree.logp, 0.0)),
+        weight=jnp.where(jnp.arange(n) == 0, 0.0, g(tree.weight, NEG) - root_w),
+        depth=jnp.where(jnp.arange(n) == 0, 0, g(tree.depth, 0) - root_d),
+        valid=live_new,
+        expanded=jnp.where(
+            jnp.arange(n) == 0,
+            jnp.where(root_exists, tree.expanded[jnp.maximum(new_root, 0)], False),
+            g(tree.expanded, False),
+        ),
+        kv_row=jnp.where(
+            jnp.arange(n) == 0,
+            kv_root_row,
+            g(kv_new_row, -1),
+        ),
+        n_nodes=1 + m,
+        plen=plen_new,
+        next_row=next_row_new,
+    )
+    return t, move, fill

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLMDataset,
+    make_request_stream,
+    sharded_batches,
+)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_request_stream", "sharded_batches"]

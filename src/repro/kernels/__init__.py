@@ -1,0 +1,10 @@
+"""Latency-optimized Pallas kernels (paper §3.3), TPU-adapted.
+
+  tree_attention    — non-square tree-mask attention (draft + verify + decode)
+  decode_attention  — split-KV decode, in-kernel combine (1 launch, 0 barriers)
+  fused_swiglu      — silu(xW) ⊙ (xV) in one HBM pass over x
+  int4_matmul       — AWQ groupwise int4 dequant-GEMM
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles the
+tests sweep against.
+"""

@@ -1,0 +1,151 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to MXU-aligned block multiples (128 lanes, 8
+sublanes), lays tensors out for the kernel grid, and un-pads the result.
+Padding is semantics-preserving: padded KV rows are masked False, padded
+matmul K columns are zero, padded query rows are sliced off.
+
+``interpret=True`` (the default through flags.pallas_interpret on this CPU
+container) runs the kernel bodies in Python for correctness validation; on a
+real TPU the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.fused_swiglu import fused_swiglu_pallas
+from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.tree_attention import tree_attention_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_dim(x, axis: int, to: int):
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# -----------------------------------------------------------------------------
+# tree attention
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tree_attention(q, k, v, mask, *, block_k: int = 128, interpret: bool = True):
+    """q: [B, n, Hq, hd]; k, v: [B, S, Hkv, hd]; mask: bool [B, n, S].
+
+    The paper's non-square tree-masked attention; returns [B, n, Hq, hd].
+    """
+    B, n, hq, hd = q.shape
+    S, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+
+    hd_p = _ceil_to(hd, 128)
+    S_p = _ceil_to(S, block_k)
+    n_p = _ceil_to(n, 8)
+
+    qp = _pad_dim(_pad_dim(q, 3, hd_p), 1, n_p)
+    kp = _pad_dim(_pad_dim(k, 3, hd_p), 1, S_p)
+    vp = _pad_dim(_pad_dim(v, 3, hd_p), 1, S_p)
+    mp = _pad_dim(_pad_dim(mask, 2, S_p), 1, n_p)
+
+    # g-major query layout: [B, Hkv, G*n_p, hd]
+    q_r = qp.reshape(B, n_p, hkv, g, hd_p).transpose(0, 2, 3, 1, 4).reshape(B, hkv, g * n_p, hd_p)
+
+    out = tree_attention_pallas(q_r, kp, vp, mp, scale=scale, block_k=block_k, interpret=interpret)
+    out = out.reshape(B, hkv, g, n_p, hd_p).transpose(0, 3, 1, 2, 4).reshape(B, n_p, hq, hd_p)
+    return out[:, :n, :, :hd]
+
+
+# -----------------------------------------------------------------------------
+# decode attention (split-KV, fused combine)
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, length, *, block_k: int = 128, interpret: bool = True):
+    """q: [B, Hq, hd]; k, v: [B, S, Hkv, hd]; length: i32 [B].
+
+    One-position decode against rows [0, length); returns [B, Hq, hd].
+    """
+    B, hq, hd = q.shape
+    S, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+
+    hd_p = _ceil_to(hd, 128)
+    g_p = _ceil_to(g, 8)
+    S_p = _ceil_to(S, block_k)
+
+    qp = _pad_dim(q, 2, hd_p).reshape(B, hkv, g, hd_p)
+    qp = _pad_dim(qp, 2, g_p)
+    kp = _pad_dim(_pad_dim(k, 3, hd_p), 1, S_p)
+    vp = _pad_dim(_pad_dim(v, 3, hd_p), 1, S_p)
+
+    out = decode_attention_pallas(
+        qp, kp, vp, length.reshape(B, 1).astype(jnp.int32),
+        scale=scale, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :, :g, :hd].reshape(B, hq, hd)
+
+
+# -----------------------------------------------------------------------------
+# fused SwiGLU
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_swiglu(x, wg, wu, *, interpret: bool = True):
+    """x: [T, d]; wg, wu: [d, ff] -> silu(x@wg) * (x@wu), [T, ff]."""
+    T, K = x.shape
+    N = wg.shape[1]
+    bm = 8 if T <= 64 else 128
+    bn, bk = 128, 128
+    T_p, K_p, N_p = _ceil_to(T, bm), _ceil_to(K, bk), _ceil_to(N, bn)
+
+    xp = _pad_dim(_pad_dim(x, 0, T_p), 1, K_p)
+    wgp = _pad_dim(_pad_dim(wg, 0, K_p), 1, N_p)
+    wup = _pad_dim(_pad_dim(wu, 0, K_p), 1, N_p)
+    out = fused_swiglu_pallas(xp, wgp, wup, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return out[:T, :N]
+
+
+# -----------------------------------------------------------------------------
+# int4 AWQ dequant-GEMM
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def int4_matmul(x, qweight, scales, zeros, *, group_size: int = 128, interpret: bool = True):
+    """x: [T, K]; qweight: int8 [K//2, N] (packed pairs along K);
+    scales/zeros: [K//group_size, N].  Returns [T, N] in x.dtype.
+
+    K must already be a multiple of group_size (quantization granularity).
+    """
+    T, K = x.shape
+    N = qweight.shape[1]
+    assert K % group_size == 0 and qweight.shape[0] * 2 == K
+    bm = 8 if T <= 64 else 128
+    bn = 128
+    T_p, N_p = _ceil_to(T, bm), _ceil_to(N, bn)
+
+    xp = _pad_dim(x, 0, T_p)
+    qwp = _pad_dim(qweight, 1, N_p)
+    sp = _pad_dim(scales, 1, N_p)
+    zp = _pad_dim(zeros, 1, N_p)
+    out = int4_matmul_pallas(
+        xp, qwp, sp, zp, group_size=group_size, block_m=bm, block_n=bn, interpret=interpret
+    )
+    return out[:T, :N]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference in tests).
+
+Shapes follow the kernel contracts in ops.py.  These are deliberately naive —
+materialized scores, full masks, f32 math — so they are easy to audit against
+the paper's operator definitions (§3.3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k, v, mask):
+    """Non-square tree-masked attention (paper §3.1/§3.3).
+
+    q: [B, n, Hq, hd] draft-leaf / verification queries
+    k, v: [B, S, Hkv, hd] full cache (prefix + tree regions)
+    mask: bool [B, n, S] — True = attend (prefix + tree ancestors + self)
+    Returns [B, n, Hq, hd]. Fully-masked query rows return zeros.
+    """
+    B, n, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(B, n, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bnkgh,bskh->bkgns", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd)
+    m = mask[:, None, None, :, :]
+    scores = jnp.where(m, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.any(m, axis=-1, keepdims=True), probs, 0.0)
+    out = jnp.einsum("bkgns,bskh->bnkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, n, hq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length):
+    """Single-position decode attention with a length mask (split-KV oracle).
+
+    q: [B, Hq, hd]; k, v: [B, S, Hkv, hd]; length: i32[B] valid cache rows.
+    Returns [B, Hq, hd].
+    """
+    B, hq, hd = q.shape
+    S, hkv = k.shape[1], k.shape[2]
+    mask = jnp.arange(S)[None, :] < length[:, None]  # [B, S]
+    out = tree_attention_ref(q[:, None], k, v, mask[:, None, :])
+    return out[:, 0]
+
+
+def fused_swiglu_ref(x, wg, wu, bg=None, bu=None):
+    """SwiGLU gate: silu(x@wg + bg) * (x@wu + bu).  x: [T, d] -> [T, ff]."""
+    g = x.astype(jnp.float32) @ wg.astype(jnp.float32)
+    u = x.astype(jnp.float32) @ wu.astype(jnp.float32)
+    if bg is not None:
+        g = g + bg.astype(jnp.float32)
+    if bu is not None:
+        u = u + bu.astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)
+
+
+def int4_matmul_ref(x, qweight, scales, zeros, group_size: int):
+    """AWQ groupwise int4 dequant-GEMM oracle.
+
+    x: [T, K]; qweight: int8 [K, N] holding values in [0, 15];
+    scales, zeros: [K // group_size, N].  w = (q - z) * s.  Returns [T, N].
+    """
+    K, N = qweight.shape
+    s = jnp.repeat(scales, group_size, axis=0)
+    z = jnp.repeat(zeros, group_size, axis=0)
+    w = (qweight.astype(jnp.float32) - z.astype(jnp.float32)) * s.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

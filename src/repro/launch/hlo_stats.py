@@ -1,0 +1,210 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / peak_FLOP/s            (per-chip: the compiled
+memory term     = HLO_bytes / HBM_bw                  SPMD module is one
+collective term = collective_bytes / link_bw          participant's program)
+
+``cost_analysis`` supplies flops / bytes accessed; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text: build an instruction →
+result-type map, then sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async ``-start`` forms
+counted once, ``-done`` skipped).
+
+DTYPE CORRECTION (documented in EXPERIMENTS.md §Roofline): the CPU backend
+cannot compute in bf16 and converts model tensors to f32 before GEMMs and
+collectives, so f32 byte counts from the CPU-compiled module overstate what a
+TPU (native bf16) module moves by 2x.  We therefore report raw numbers AND a
+corrected variant with f32 bytes scaled by 0.5; genuinely-f32 tensors
+(optimizer masters, softmax statistics) are under-counted by the correction,
+bounded by their small share of traffic.  Corrected values drive the
+bottleneck classification.
+
+Hardware model (assignment constants, TPU v5e-class):
+  197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link (ICI)
+DTYPE_CORRECTION = 0.5  # f32-on-CPU -> bf16-on-TPU
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> tuple[float, float]:
+    """-> (raw_bytes, corrected_bytes) for a (possibly tuple) HLO type."""
+    raw = corr = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dtype]
+        raw += b
+        corr += b * (DTYPE_CORRECTION if dtype == "f32" else 1.0)
+    return raw, corr
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict  # raw operand bytes per op kind
+    corrected_by_kind: dict  # f32 scaled to bf16
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_corrected(self) -> float:
+        return sum(self.corrected_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in a per-participant SPMD module."""
+    # pass 1: instruction name -> result type string
+    types: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            types[m.group(1)] = m.group(2)
+
+    bytes_by: dict[str, float] = {}
+    corr_by: dict[str, float] = {}
+    count_by: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = op.replace("-start", "") if op.endswith("-start") else op
+        if base not in _COLL_OPS or op.endswith("-done"):
+            continue
+        # operand list: everything inside the call parens on this line
+        call = line.split(f"{op}(", 1)[1]
+        operands = call.split(")", 1)[0]
+        raw = corr = 0.0
+        for name in _OPERAND_RE.findall(operands):
+            t = types.get(name)
+            if t is None:
+                continue
+            r, c = _type_bytes(t)
+            raw += r
+            corr += c
+        bytes_by[base] = bytes_by.get(base, 0.0) + raw
+        corr_by[base] = corr_by.get(base, 0.0) + corr
+        count_by[base] = count_by.get(base, 0) + 1
+    return CollectiveStats(bytes_by, corr_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-chip HLO flops
+    hbm_bytes_raw: float  # per-chip bytes accessed (CPU-compiled, f32-inflated)
+    hbm_bytes: float  # dtype-corrected
+    collective_bytes_raw: float
+    collective_bytes: float  # dtype-corrected
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    bottleneck: str
+    model_flops: float  # 6·N·D (train) or 2·N_active·D (serve), per chip
+    useful_fraction: float  # model_flops / flops
+    roofline_fraction: float  # ideal model-flops time / dominant term
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms_from_module(mc, model_flops_per_chip: float) -> Roofline:
+    """Terms from a loop-aware hlo_parse.ModuleCost (trip-scaled)."""
+    flops = mc.flops
+    hbm_raw, hbm = mc.bytes_raw, mc.bytes
+    cb_raw, cb = mc.collective_bytes_raw, mc.collective_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = cb / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    t_ideal = model_flops_per_chip / PEAK_FLOPS
+    dominant = max(terms.values())
+    return Roofline(
+        flops=flops, hbm_bytes_raw=hbm_raw, hbm_bytes=hbm,
+        collective_bytes_raw=cb_raw, collective_bytes=cb,
+        t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_chip,
+        useful_fraction=(model_flops_per_chip / flops) if flops else 0.0,
+        roofline_fraction=(t_ideal / dominant) if dominant > 0 else 0.0,
+    )
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, model_flops_per_chip: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm_raw = float(cost.get("bytes accessed", 0.0))
+    hbm = hbm_raw * DTYPE_CORRECTION
+    cb_raw = float(coll.total_bytes)
+    cb = float(coll.total_corrected)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = cb / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    t_ideal = model_flops_per_chip / PEAK_FLOPS
+    dominant = max(terms.values())
+    return Roofline(
+        flops=flops, hbm_bytes_raw=hbm_raw, hbm_bytes=hbm,
+        collective_bytes_raw=cb_raw, collective_bytes=cb,
+        t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops_per_chip,
+        useful_fraction=(model_flops_per_chip / flops) if flops else 0.0,
+        roofline_fraction=(t_ideal / dominant) if dominant > 0 else 0.0,
+    )
+
+
+def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
+    """MODEL_FLOPS for the cell, divided over chips.
+
+    Parameter part: 6·N·D (train fwd+bwd) / 2·N_active·D (serve forward), D =
+    tokens processed.  Attention part (dominant at long context): per layer
+    4·T_q·S_kv·Hq·hd forward (qk + pv), ×3 with backward; causal prefill/train
+    halves S_kv on average.  MoE uses active params (routed top-k + shared)."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    d_attn = cfg.n_heads * cfg.head_dim
+    n_attn_layers = sum(1 for k in cfg.layer_kinds if k in ("dense", "moe", "cross"))
+    if cfg.shared_attn_every:
+        n_attn_layers += (cfg.n_layers - cfg.first_k_dense) // cfg.shared_attn_every
+    if shape.kind == "train":
+        total = 6.0 * n_active * (B * S)
+        total += 3 * 4.0 * B * (S * S / 2) * d_attn * n_attn_layers
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active * (B * S)
+        total += 4.0 * B * (S * S / 2) * d_attn * n_attn_layers
+    else:  # decode: one token per sequence against an S-row cache
+        total = 2.0 * n_active * B
+        total += 4.0 * B * S * d_attn * n_attn_layers
+    return total / n_chips

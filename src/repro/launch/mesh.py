@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips, one ICI domain.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the "pod" axis is pure
+data parallelism over DCN (weights never shard across pods; only the gradient
+all-reduce crosses the DCN boundary, optionally int8-compressed).
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run pins XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_target: int, n_draft: int):
+    """Disaggregated serving: disjoint (target, draft) TP submeshes
+    (paper §3.1 GPU allocation).  Falls back to one shared device on the
+    CPU container (correctness-only)."""
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = jax.devices()
+    if len(devs) < n_target + n_draft:
+        m = Mesh(np.array(devs[:1]), ("model",))
+        return m, m
+    tgt = Mesh(np.array(devs[:n_target]), ("model",))
+    drf = Mesh(np.array(devs[n_target : n_target + n_draft]), ("model",))
+    return tgt, drf
+
+
+def host_device_mesh(model: int = 1, data: int = 1):
+    """Small explicit mesh for tests (uses however many devices exist)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,188 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation (the dry-run contract).
+
+``cell_specs(arch, shape, mesh)`` returns (step_fn, args_sds) such that
+``jax.jit(step_fn).lower(*args_sds)`` is the production computation for that
+(architecture × input-shape) cell:
+
+  train_*    -> train_step(params, opt_state, batch)     fwd+bwd+AdamW
+  prefill_*  -> prefill_step(params, batch)              full forward + cache
+  decode_* / long_* -> serve_step(params, cache, tokens) one token vs cache
+
+Shardings ride on the structs (jit reads them off the avals), so no
+in_shardings plumbing is needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, resolve_for_tp
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.api import make_model
+from repro.models.transformer import init_cache, init_model
+from repro.optim import adamw_init
+from repro.sharding import Param, sharding_for_tree, unbox
+
+COMPUTE_DTYPE = "bfloat16"
+
+
+# -----------------------------------------------------------------------------
+# helpers
+# -----------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh, dim: int) -> tuple[str, ...]:
+    """('pod','data') filtered to axes that divide ``dim`` (drop from the
+    right first, mirroring spec_for's partial fallback)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=NamedSharding(mesh, spec))
+
+
+def dryrun_config(arch: str, mesh: Mesh) -> ModelConfig:
+    """Published config, bf16 compute, head/ff dims padded for the mesh's TP
+    degree (the paper's arbitrary-TP zero-padding, §4)."""
+    cfg = get_config(arch)
+    cfg = replace(cfg, dtype=COMPUTE_DTYPE, param_dtype=COMPUTE_DTYPE)
+    return resolve_for_tp(cfg, mesh.shape.get("model", 1))
+
+
+# -----------------------------------------------------------------------------
+# parameter / optimizer / cache stand-ins
+# -----------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """eval_shape of init_model -> BOXED tree whose Param values are SDS with
+    NamedShardings attached (the step functions expect boxed params)."""
+    boxed = jax.eval_shape(lambda k: init_model(cfg, k), jax.random.PRNGKey(0))
+
+    def attach(p: Param):
+        from repro.sharding import spec_for
+
+        sh = NamedSharding(mesh, spec_for(mesh, p.axes, p.value.shape))
+        return Param(jax.ShapeDtypeStruct(p.value.shape, p.value.dtype, sharding=sh), p.axes)
+
+    return jax.tree.map(attach, boxed, is_leaf=lambda x: isinstance(x, Param)), boxed
+
+
+def opt_specs(params_sds, mesh: Mesh):
+    """AdamW state stand-ins: f32 moments/master share the param shardings."""
+    def f32(v):
+        return jax.ShapeDtypeStruct(v.shape, jnp.float32, sharding=v.sharding)
+
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(
+        step=_sds((), jnp.int32, mesh, P()),
+        mu=jax.tree.map(f32, params_sds),
+        nu=jax.tree.map(f32, params_sds),
+        master=jax.tree.map(f32, params_sds),
+    )
+
+
+_SEQ_KEYS = {"k": 2, "v": 2, "ckv": 2, "krope": 2, "ek": 2, "ev": 2}
+_MODEL_DIM_KEYS = {"ssm": 2, "wkv": 2}  # heads dim shards over "model"
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, B: int, S_max: int):
+    """init_cache stand-ins: [U, B, S, ...] leaves; batch over (pod,data),
+    cache sequence over "model" (kv_seq rule), SSM heads over "model"."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, B, S_max, jnp.dtype(COMPUTE_DTYPE)))
+    msize = mesh.shape.get("model", 1)
+    baxes = _batch_axes(mesh, B)
+
+    def attach(path, v):
+        if v.ndim == 0:  # "len"
+            return jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=NamedSharding(mesh, P()))
+        key = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                key = p.key
+                break
+        spec = [None] * v.ndim
+        spec[1] = baxes if baxes else None
+        if key in _SEQ_KEYS and v.shape[_SEQ_KEYS[key]] % msize == 0:
+            spec[_SEQ_KEYS[key]] = "model"
+        elif key in _MODEL_DIM_KEYS and v.shape[_MODEL_DIM_KEYS[key]] % msize == 0:
+            spec[_MODEL_DIM_KEYS[key]] = "model"
+        return jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree_util.tree_map_with_path(attach, shapes)
+
+
+# -----------------------------------------------------------------------------
+# per-cell input stand-ins
+# -----------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh) -> dict:
+    """Model-input stand-ins for train/prefill cells; stub frontends supply
+    embeddings instead of token ids (assignment: modality frontend stubbed)."""
+    B, S = shape.global_batch, shape.seq_len
+    baxes = _batch_axes(mesh, B)
+    bspec = baxes if baxes else None
+    out: dict = {}
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            out["tokens"] = _sds((B, S + 1), jnp.int32, mesh, P(bspec, None))
+        else:  # audio stub frontend: precomputed frame embeddings + labels
+            out["embeds"] = _sds((B, S, cfg.d_model), COMPUTE_DTYPE, mesh, P(bspec, None, None))
+            out["labels"] = _sds((B, S), jnp.int32, mesh, P(bspec, None))
+    else:  # prefill
+        if cfg.embed_inputs:
+            out["tokens"] = _sds((B, S), jnp.int32, mesh, P(bspec, None))
+        else:
+            out["embeds"] = _sds((B, S, cfg.d_model), COMPUTE_DTYPE, mesh, P(bspec, None, None))
+    if cfg.n_enc_tokens:  # vlm stub frontend: precomputed patch embeddings
+        out["enc"] = _sds((B, cfg.n_enc_tokens, cfg.d_model), COMPUTE_DTYPE, mesh, P(bspec, None, None))
+    return out
+
+
+def cell_specs(arch: str, shape_name: str, mesh: Mesh):
+    """-> (step_fn, args_tuple_of_SDS, meta dict)."""
+    from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+
+    cfg = dryrun_config(arch, mesh)
+    shape = SHAPES[shape_name]
+    model = make_model(cfg)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+
+    if shape.kind == "train":
+        params_sds, boxed = param_specs(cfg, mesh)
+        opt_sds = opt_specs(params_sds, mesh)
+        batch = batch_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, model)
+        return step, (params_sds, opt_sds, batch), meta
+
+    if shape.kind == "prefill":
+        params_sds, _ = param_specs(cfg, mesh)
+        batch = batch_specs(cfg, shape, mesh)
+        step = make_prefill_step(cfg, model, S_max=shape.seq_len)
+        return step, (params_sds, batch), meta
+
+    # decode / long-context decode: one token against a seq_len cache
+    B, S_max = shape.global_batch, shape.seq_len
+    params_sds, _ = param_specs(cfg, mesh)
+    cache = cache_specs(cfg, mesh, B, S_max)
+    baxes = _batch_axes(mesh, B)
+    tokens = _sds((B, 1), jnp.int32, mesh, P(baxes if baxes else None, None))
+    step = make_decode_step(cfg, model, S_max=S_max)
+    return step, (params_sds, cache, tokens), meta

@@ -1,0 +1,3 @@
+from repro.models.api import Model, make_model
+
+__all__ = ["Model", "make_model"]

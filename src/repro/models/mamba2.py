@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) block: chunked state-space scan for train/prefill, masked-
+commit chain mode for speculative verification on state models (DESIGN.md §6).
+
+Projections are split per segment (z / x / BC / dt) instead of one fused
+in_proj so each shards cleanly: d_in and heads over "model", the small B/C/dt
+segments replicated.  State per layer: conv window [B, K-1, conv_dim] + SSM
+state [B, H, hd, N] (f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, ones_init, rms_norm, zeros_init
+from repro.sharding import Param, constrain
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def init_mamba2(cfg, key):
+    d = cfg.d_model
+    d_in, nheads, conv_dim = _dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    a0 = jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32))
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), ("embed", "inner"), dt),
+        "w_x": dense_init(ks[1], (d, d_in), ("embed", "inner"), dt),
+        "w_bc": dense_init(ks[2], (d, 2 * G * N), ("embed", None), dt),
+        "w_dt": dense_init(ks[3], (d, nheads), ("embed", "inner"), dt),
+        "conv_wx": dense_init(ks[4], (cfg.ssm_conv, d_in), ("conv", "inner"), dt, scale=0.5),
+        "conv_wbc": dense_init(ks[5], (cfg.ssm_conv, 2 * G * N), ("conv", None), dt, scale=0.5),
+        "conv_b": zeros_init((conv_dim,), ("inner",), dt),
+        "a_log": Param(a0.astype(dt), ("inner",)),
+        "dt_bias": zeros_init((nheads,), ("inner",), dt),
+        "d_skip": ones_init((nheads,), ("inner",), dt),
+        "norm_w": ones_init((d_in,), ("inner",), dt),
+        "out_proj": dense_init(jax.random.fold_in(ks[0], 7), (d_in, d), ("inner", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b, window0=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. window0: [B,K-1,C] history."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if window0 is None:
+        window0 = jnp.zeros((B, K - 1, C), x.dtype)
+    ext = jnp.concatenate([window0, x], axis=1)  # [B, K-1+S, C]
+    out = sum(ext[:, i : i + S, :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), ext
+
+
+def _ssd_chunked(cfg, x, b, c, dt, a_log, d_skip, state0, chunk=64):
+    """Chunked SSD scan.
+
+    x: [B,S,H,hd]; b,c: [B,S,G,N]; dt: [B,S,H] (post-softplus, f32).
+    Returns (y [B,S,H,hd], final state [B,H,hd,N] f32).
+    """
+    B, S, H, hd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    rep = H // G
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H]
+    xr = x.reshape(B, nc, chunk, H, hd)
+    br = jnp.repeat(b.reshape(B, nc, chunk, G, N), rep, axis=3)
+    cr = jnp.repeat(c.reshape(B, nc, chunk, G, N), rep, axis=3)
+    dtr = dt.reshape(B, nc, chunk, H)
+    cum = jnp.cumsum(dtr * a, axis=2)  # inclusive cumsum of log-decays
+
+    def step(state, inp):
+        xc, bc, cc, dtc, cumc = inp  # [B,chunk,...]
+        seg = cumc[:, :, None, :] - cumc[:, None, :, :]  # [B,i,j,H]
+        tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, :, :, None]
+        # mask BEFORE exp: the j>i half has positive exponents that overflow,
+        # and where(tri, exp, 0) backward would produce 0*inf = NaN grads
+        L = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+        cb = jnp.einsum("bihn,bjhn->bijh", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        w = cb * L * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w, xc.astype(jnp.float32))
+        y_cross = jnp.einsum("bihn,bhdn->bihd", cc.astype(jnp.float32), state) * jnp.exp(cumc)[..., None]
+        decay_to_end = jnp.exp(cumc[:, -1:, :] - cumc)  # [B,chunk,H]
+        xw = xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None]
+        new_state = jnp.exp(cumc[:, -1, :])[:, :, None, None] * state + jnp.einsum(
+            "bjhd,bjhn->bhdn", xw, bc.astype(jnp.float32)
+        )
+        return new_state, (y_intra + y_cross).astype(x.dtype)
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (xr, br, cr, dtr, cum))
+    state_f, ys = jax.lax.scan(step, state0.astype(jnp.float32), inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y, state_f
+
+
+def _ssd_stepwise(cfg, x, b, c, dt, a_log, d_skip, state0, commit_mask):
+    """Per-step SSD recurrence for chain-mode verification (S = chain length,
+    small).  Equivalent math to the chunked scan; carries (full, committed)
+    states so outputs stay teacher-forced while the returned state is the
+    snapshot after exactly the committed prefix (cf. rwkv6._wkv_scan)."""
+    B, S, H, hd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H]
+    br = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cr = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+
+    def step(carry, inp):
+        full, comm = carry
+        xt, bt, ct, dtt, mt = inp  # [B,H,hd],[B,H,N],[B,H,N],[B,H],[B]
+        decay = jnp.exp(dtt * a)  # [B,H]
+        full = full * decay[..., None, None] + jnp.einsum(
+            "bhd,bhn,bh->bhdn", xt.astype(jnp.float32), bt, dtt
+        )
+        yt = jnp.einsum("bhn,bhdn->bhd", ct, full)
+        comm = jnp.where(mt[:, None, None, None], full, comm)
+        return (full, comm), yt
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (x, br, cr, dt, commit_mask))
+    s0 = state0.astype(jnp.float32)
+    (_, state_c), ys = jax.lax.scan(step, (s0, s0), inps)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y, state_c
+
+
+def mamba2_apply(cfg, p, xin, cache=None, commit_mask=None):
+    """Mamba2 block on [B,S,d] (S may be full seq, a decode step, or a chain).
+
+    cache: {"conv": [B,K-1,conv_dim], "ssm": [B,H,hd,N]} or None (fresh).
+    commit_mask [B,S]: if given, the returned cache corresponds to the masked
+    prefix only (chain-mode rollback); outputs remain teacher-forced.
+    Returns (out [B,S,d], new_cache).
+    """
+    B, S, _ = xin.shape
+    d_in, nheads, conv_dim = _dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    K = cfg.ssm_conv
+    z = xin @ p["w_z"].value
+    x = xin @ p["w_x"].value
+    bc = xin @ p["w_bc"].value
+    dt_raw = xin @ p["w_dt"].value
+
+    xbc = jnp.concatenate([x, bc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_wx"].value, p["conv_wbc"].value], axis=-1)
+    window0 = cache["conv"] if cache is not None else None
+    conv, ext = _causal_conv(xbc, conv_w, p["conv_b"].value, window0)
+
+    if commit_mask is None:
+        new_conv = ext[:, S:, :]  # ext has S+K-1 rows; keep the trailing window
+    else:
+        n_commit = jnp.sum(commit_mask.astype(jnp.int32), axis=1)  # [B]
+        idx = n_commit[:, None] + jnp.arange(K - 1)[None, :]
+        new_conv = jax.vmap(lambda e, i: e[i])(ext, idx)
+
+    xc = conv[..., :d_in].reshape(B, S, nheads, cfg.ssm_head_dim)
+    bcv = conv[..., d_in:]
+    bv = bcv[..., : G * N].reshape(B, S, G, N)
+    cv = bcv[..., G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].value.astype(jnp.float32))
+    state0 = cache["ssm"] if cache is not None else jnp.zeros((B, nheads, cfg.ssm_head_dim, N), jnp.float32)
+    if commit_mask is not None:
+        # chain mode: per-step recurrence, committed-state snapshot
+        y, state_f = _ssd_stepwise(cfg, xc, bv, cv, dt, p["a_log"].value,
+                                   p["d_skip"].value, state0, commit_mask)
+    else:
+        y, state_f = _ssd_chunked(cfg, xc, bv, cv, dt, p["a_log"].value, p["d_skip"].value, state0)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"].value, cfg.norm_eps)
+    out = y @ p["out_proj"].value
+    return constrain(out, "batch", "seq", "act_embed"), {"conv": new_conv, "ssm": state_f}
+
+
+def init_mamba_cache(cfg, B, dtype):
+    d_in, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((B, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

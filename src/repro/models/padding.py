@@ -1,0 +1,66 @@
+"""Arbitrary-TP zero-padding (paper §4).
+
+``resolve_for_tp`` (configs/base.py) widens head counts / ff dims so every
+matmul splits across the mesh's TP degree; ``pad_params`` embeds an existing
+model's weights into the widened parameter tree with zeros.
+
+Zero padding is output-equivalent: padded ff columns contribute
+silu(0)·0 = 0 through a zero-padded down-projection row, and padded attention
+heads produce zero output through their zero-padded o-projection rows —
+exactly the paper's construction (tests/test_sharding.py asserts equality).
+
+GQA subtlety: query heads are grouped per KV head (``g = Hq/Hkv``), so
+padding must interleave new slots WITHIN each group — old head (k·g + j)
+lands at (k·g' + j) — or the widened reshape would re-pair queries with the
+wrong KV heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Param
+
+
+def _head_map(hq_old: int, hq_new: int, hkv_old: int, hkv_new: int):
+    """old query-head index -> new index, preserving KV grouping.
+
+    Old head (k·g_old + j) lands at (k·g_new + j); when the padding widened
+    the KV heads at fixed g this is the identity (tail padding)."""
+    if hkv_old <= 0 or hq_old % hkv_old or hkv_new <= 0 or hq_new % hkv_new:
+        return jnp.arange(hq_old)
+    g_old, g_new = hq_old // hkv_old, hq_new // hkv_new
+    k = jnp.arange(hq_old) // g_old
+    j = jnp.arange(hq_old) % g_old
+    return k * g_new + j
+
+
+def pad_params(cfg_small, cfg_big, params_small, params_big):
+    """Embed ``params_small`` into the zero-initialized ``params_big`` tree
+    (which supplies target shapes, e.g. an init of the resolve_for_tp'd
+    config).  Returns the zero-padded tree."""
+    hmap = _head_map(cfg_small.n_heads, cfg_big.n_heads,
+                     cfg_small.n_kv_heads, cfg_big.n_kv_heads)
+
+    def one(ps: Param, pb: Param):
+        a, b = ps.value, pb.value
+        assert a.ndim == b.ndim, (a.shape, b.shape)
+        out = jnp.zeros(b.shape, b.dtype)
+        idx = []
+        for d, (sa, ax) in enumerate(zip(a.shape, ps.axes)):
+            if ax == "heads" and sa == cfg_small.n_heads and b.shape[d] == cfg_big.n_heads:
+                idx.append(d)
+        val = a.astype(b.dtype)
+        if not idx:
+            return Param(out.at[tuple(slice(0, s) for s in a.shape)].set(val), pb.axes)
+        # scatter grouped head slots (one heads dim per param in this zoo)
+        (d,) = idx
+        moved = jnp.moveaxis(val, d, 0)
+        tgt = jnp.moveaxis(out, d, 0)
+        lead = tuple(slice(0, s) for s in moved.shape[1:])
+        tgt = tgt.at[(hmap,) + lead].set(moved)
+        return Param(jnp.moveaxis(tgt, 0, d), pb.axes)
+
+    return jax.tree.map(one, params_small, params_big,
+                        is_leaf=lambda x: isinstance(x, Param))

@@ -1,0 +1,218 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The defining v6 feature — per-step, per-channel decay computed from the input
+through a low-rank MLP — is implemented faithfully; the five per-projection
+mixing LoRAs are simplified to static channel mixes (DESIGN.md §8).
+
+State per layer: token-shift vectors (time-mix + channel-mix) and the WKV
+matrix state [B, H, hd, hd] (f32).  Chain mode uses masked-commit like mamba2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, ones_init, zeros_init
+from repro.sharding import Param, constrain
+
+DECAY_LORA = 64
+
+
+def _dims(cfg):
+    hd = cfg.ssm_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv6(cfg, key):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.param_dtype)
+    u0 = jnp.zeros((H, hd), jnp.float32)
+    return {
+        # time-mix
+        "mu_tm": Param(jnp.full((5, d), 0.5, dt), ("layers", "embed")),  # r,k,v,g,w mixes
+        "w_r": dense_init(ks[0], (d, d), ("embed", "inner"), dt),
+        "w_k": dense_init(ks[1], (d, d), ("embed", "inner"), dt),
+        "w_v": dense_init(ks[2], (d, d), ("embed", "inner"), dt),
+        "w_g": dense_init(ks[3], (d, d), ("embed", "inner"), dt),
+        "w_o": dense_init(ks[4], (d, d), ("inner", "embed"), dt),
+        "decay_base": Param(jnp.full((d,), -6.0, dt), ("inner",)),
+        "decay_a": dense_init(ks[5], (d, DECAY_LORA), ("embed", "lora"), dt, scale=0.1),
+        "decay_b": dense_init(ks[6], (DECAY_LORA, d), ("lora", "inner"), dt, scale=0.1),
+        "bonus_u": Param(u0.astype(dt), ("inner", None)),
+        "ln_x": ones_init((d,), ("inner",), dt),
+        # channel-mix
+        "mu_cm": Param(jnp.full((2, d), 0.5, dt), ("layers", "embed")),  # k,r mixes
+        "cm_k": dense_init(ks[7], (d, ff), ("embed", "ff"), dt),
+        "cm_v": dense_init(ks[8], (ff, d), ("ff", "embed"), dt),
+        "cm_r": dense_init(ks[9], (d, d), ("embed", "inner"), dt),
+    }
+
+
+def _token_shift(x, last):
+    """x [B,S,d], last [B,d] -> previous-token tensor [B,S,d]."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _wkv_chunked(r, k, v, logw, u, state0, chunk=32):
+    """Chunked WKV-6 (§Perf B2): the segment-sum form of the recurrence.
+
+    Same math as the per-step scan but with 1/chunk the state round-trips:
+    within a chunk of length C, with L = cumsum(log w) (per k-channel),
+
+      y_t      = Σ_k r_t[k]·e^{L_{t-1}[k]}·S_0[k,:]                (cross)
+               + Σ_{j<t} Σ_k r_t[k]·k_j[k]·e^{L_{t-1}[k]-L_j[k]}·v_j  (intra)
+               + (r_t·(u⊙k_t))·v_t                                  (bonus)
+      S_C      = e^{L_C} ⊙ S_0 + Σ_j e^{L_C - L_j} ⊙ k_j ⊗ v_j
+
+    All exponents are ≤ 0 (decays), masked BEFORE exp (cf. mamba2 NaN note).
+    r,k,v: [B,S,H,hd]; logw: [B,S,H,hd] (≤0); state: [B,H,hd_k,hd_v] f32.
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    rf, kf, vf, lw = (t.astype(jnp.float32).reshape(B, nc, chunk, H, hd)
+                      for t in (r, k, v, logw))
+
+    Lc = jnp.cumsum(lw, axis=2)  # inclusive decay log-sums
+    Lprev = Lc - lw  # L_{t-1}
+
+    tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])  # j < t
+
+    def one_chunk(state, inp):
+        rc, kc, vc, lc, lp = inp  # [B,chunk,H,hd]
+        # cross: r decayed to chunk start, against the carried state
+        y_cross = jnp.einsum("bthk,bhkv->bthv", rc * jnp.exp(lp), state)
+        # intra: pairwise decay factors, masked before exp
+        seg = lp[:, :, None] - lc[:, None, :]  # [B,t,j,H,hd]
+        seg = jnp.where(tri[None, :, :, None, None], seg, 0.0)
+        E = jnp.where(tri[None, :, :, None, None], jnp.exp(seg), 0.0)
+        M = jnp.einsum("bthk,bjhk,btjhk->btjh", rc, kc, E)
+        y_intra = jnp.einsum("btjh,bjhv->bthv", M, vc)
+        y_bonus = jnp.einsum("bthk,bthv->bthv", rc * u[None, None] * kc, vc)
+        # state to chunk end
+        decay_end = jnp.exp(lc[:, -1:, :] - lc)  # e^{L_C - L_j}
+        state = jnp.exp(lc[:, -1])[:, :, :, None] * state + jnp.einsum(
+            "bjhk,bjhv->bhkv", kc * decay_end, vc)
+        return state, y_cross + y_intra + y_bonus
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, Lc, Lprev))
+    state_f, ys = jax.lax.scan(one_chunk, state0.astype(jnp.float32), inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, state_f
+
+
+def _wkv_scan(r, k, v, w, u, state0, commit_mask=None):
+    """WKV-6 recurrence.
+
+    r,k,v: [B,S,H,hd]; w: [B,S,H,hd] decay in (0,1); u: [H,hd] bonus.
+    state: [B,H,hd(k),hd(v)].  y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+
+    Outputs are always teacher-forced through the FULL recurrence; with a
+    ``commit_mask`` the returned state is the snapshot after exactly the
+    masked prefix (chain-mode speculation: wrong guesses never contaminate
+    the committed state, yet every verification logit is exact).
+    """
+    B, S, H, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def advance(full, rt, kt, vt, wt):
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, full + u[None, :, :, None] * kv)
+        return wt[..., None] * full + kv, yt
+
+    s0 = state0.astype(jnp.float32)
+    seq = lambda t: jnp.moveaxis(t, 1, 0)
+
+    if commit_mask is None:  # train/prefill/decode: single state carry
+        def step1(full, inp):
+            full, yt = advance(full, *inp)
+            return full, yt
+
+        state_c, ys = jax.lax.scan(step1, s0, (seq(rf), seq(kf), seq(vf), seq(wf)))
+    else:  # chain mode: (full, committed) pair
+        def step2(carry, inp):
+            full, comm = carry
+            *rkvw, mt = inp
+            full, yt = advance(full, *rkvw)
+            comm = jnp.where(mt[:, None, None, None], full, comm)
+            return (full, comm), yt
+
+        (_, state_c), ys = jax.lax.scan(
+            step2, (s0, s0), (seq(rf), seq(kf), seq(vf), seq(wf), seq(commit_mask))
+        )
+    return jnp.moveaxis(ys, 0, 1), state_c  # [B,S,H,hd], committed state
+
+
+def rwkv6_time_mix(cfg, p, x, cache, commit_mask=None):
+    """Returns (out [B,S,d], new_cache)."""
+    B, S, d = x.shape
+    H, hd = _dims(cfg)
+    last = cache["sx_tm"] if cache is not None else jnp.zeros((B, d), x.dtype)
+    prev = _token_shift(x, last)
+    mu = p["mu_tm"].value  # [5,d]
+    xr, xk, xv, xg, xw = (x + (prev - x) * mu[i] for i in range(5))
+    r = (xr @ p["w_r"].value).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"].value).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"].value).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"].value)
+    # data-dependent decay (the Finch feature): w = exp(-exp(base + lora(x)))
+    dec = p["decay_base"].value.astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_a"].value) @ p["decay_b"].value
+    ).astype(jnp.float32)
+    logw = -jnp.exp(dec).reshape(B, S, H, hd)  # log-decay, always <= 0
+    state0 = cache["wkv"] if cache is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    uu = p["bonus_u"].value.astype(jnp.float32)
+    if commit_mask is None and S >= 16:
+        # chunked segment-sum form: 1/chunk the state round-trips (§Perf B2)
+        y, state_f = _wkv_chunked(r, k, v, logw, uu, state0)
+    else:
+        y, state_f = _wkv_scan(r, k, v, jnp.exp(logw), uu, state0, commit_mask)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    # group-norm substitute: per-head rms then learned scale
+    yh = y.reshape(B, S, H, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, d) * p["ln_x"].value.astype(jnp.float32)).astype(x.dtype)
+    out = (y * g) @ p["w_o"].value
+
+    if commit_mask is not None:
+        n_commit = jnp.sum(commit_mask.astype(jnp.int32), axis=1)  # [B]
+        ext = jnp.concatenate([last[:, None, :], x], axis=1)  # [B,S+1,d]
+        new_last = jax.vmap(lambda e, i: e[i])(ext, n_commit)
+    else:
+        new_last = x[:, -1, :]
+    return constrain(out, "batch", "seq", "act_embed"), {"sx_tm": new_last, "wkv": state_f}
+
+
+def rwkv6_channel_mix(cfg, p, x, cache, commit_mask=None):
+    B, S, d = x.shape
+    last = cache["sx_cm"] if cache is not None else jnp.zeros((B, d), x.dtype)
+    prev = _token_shift(x, last)
+    mu = p["mu_cm"].value
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].value))
+    out = jax.nn.sigmoid(xr @ p["cm_r"].value) * (k @ p["cm_v"].value)
+    if commit_mask is not None:
+        n_commit = jnp.sum(commit_mask.astype(jnp.int32), axis=1)
+        ext = jnp.concatenate([last[:, None, :], x], axis=1)
+        new_last = jax.vmap(lambda e, i: e[i])(ext, n_commit)
+    else:
+        new_last = x[:, -1, :]
+    return constrain(out, "batch", "seq", "act_embed"), {"sx_cm": new_last}
+
+
+def init_rwkv_cache(cfg, B, dtype):
+    H, hd = _dims(cfg)
+    return {
+        "sx_tm": jnp.zeros((B, cfg.d_model), dtype),
+        "wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "sx_cm": jnp.zeros((B, cfg.d_model), dtype),
+    }

@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compression import compress_int8, decompress_int8, pod_allreduce_compressed
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "compress_int8",
+    "decompress_int8",
+    "pod_allreduce_compressed",
+]

@@ -1,0 +1,3 @@
+from repro.quant.awq import dequantize, pack_int4, quantize_groupwise, unpack_int4
+
+__all__ = ["dequantize", "pack_int4", "quantize_groupwise", "unpack_int4"]

@@ -1,0 +1,66 @@
+"""Groupwise int4 weight quantization (AWQ-style, paper §5.1).
+
+The paper serves every transformer-layer weight as 4-bit AWQ with group size
+128.  We reproduce the serving-side artifact exactly — per-group scale + zero
+point, nibble-packed storage, dequant-GEMM consumption — and replace AWQ's
+activation-aware scale *search* with min/max calibration (DESIGN.md §8: the
+search changes values, not structure, and needs calibration data we don't
+ship offline).
+
+Packing: values in [0, 15]; byte b of column n holds k=2b in the low nibble
+and k=2b+1 in the high nibble — matching kernels/int4_matmul.py's unpack.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedLinear(NamedTuple):
+    qweight: jax.Array  # int8 [K//2, N] packed nibbles
+    scales: jax.Array  # f32 [K//g, N]
+    zeros: jax.Array  # f32 [K//g, N]
+    group_size: int
+
+
+def quantize_groupwise(w, group_size: int = 128) -> QuantizedLinear:
+    """w: [K, N] float.  Min/max asymmetric 4-bit per (group, column)."""
+    K, N = w.shape
+    assert K % group_size == 0, (K, group_size)
+    wg = w.astype(jnp.float32).reshape(K // group_size, group_size, N)
+    wmin = jnp.min(wg, axis=1)  # [G, N]
+    wmax = jnp.max(wg, axis=1)
+    scales = jnp.maximum((wmax - wmin) / 15.0, 1e-8)
+    zeros = -wmin / scales  # q = w/s + z  in [0, 15]
+    q = jnp.clip(jnp.round(wg / scales[:, None, :] + zeros[:, None, :]), 0, 15)
+    q = q.reshape(K, N).astype(jnp.int8)
+    return QuantizedLinear(pack_int4(q), scales, zeros, group_size)
+
+
+def pack_int4(q) -> jax.Array:
+    """int8 [K, N] values 0..15 -> packed int8 [K//2, N]."""
+    K, N = q.shape
+    assert K % 2 == 0
+    pairs = q.reshape(K // 2, 2, N).astype(jnp.uint8)
+    packed = pairs[:, 0, :] | (pairs[:, 1, :] << 4)
+    return packed.astype(jnp.int8)
+
+
+def unpack_int4(packed) -> jax.Array:
+    """packed int8 [K//2, N] -> int8 [K, N] values 0..15."""
+    p = packed.astype(jnp.uint8)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    K2, N = p.shape
+    return jnp.stack([lo, hi], axis=1).reshape(K2 * 2, N).astype(jnp.int8)
+
+
+def dequantize(q: QuantizedLinear) -> jax.Array:
+    """Reference dense reconstruction (the oracle for the Pallas kernel)."""
+    w = unpack_int4(q.qweight).astype(jnp.float32)
+    s = jnp.repeat(q.scales, q.group_size, axis=0)
+    z = jnp.repeat(q.zeros, q.group_size, axis=0)
+    return (w - z) * s

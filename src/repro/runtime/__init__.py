@@ -1,0 +1,4 @@
+from repro.runtime.fault import FaultConfig, retry_step, StragglerPolicy
+from repro.runtime.elastic import reshard_engine, replan_split
+
+__all__ = ["FaultConfig", "retry_step", "StragglerPolicy", "reshard_engine", "replan_split"]

@@ -1,0 +1,63 @@
+"""Elastic re-sharding: move the engine / train state onto a new device split.
+
+Two elasticity events matter for SwiftSpec-style serving:
+  * draft/target re-allocation — the profiling pass (core/scheduler.py) or a
+    straggling draft group calls for a different x:(k-x) split; params must
+    re-shard onto the new submeshes without dropping the conversation state;
+  * shrink/grow — a pod or host is lost/added; train state restores from the
+    checkpoint onto the surviving mesh (shardings are recomputed from the
+    same logical-axis rules, so any mesh shape that divides the dims works).
+
+Both reduce to "device_put the same logical tree under new NamedShardings",
+which is exactly what these helpers do.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import sharding_for_tree, unbox
+
+
+def submeshes(devices, n_target: int, axis_name: str = "model"):
+    """Split a flat device list into (target_mesh, draft_mesh) 1-D TP meshes."""
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = list(devices)
+    assert 1 <= n_target < len(devs) or len(devs) == 1, (n_target, len(devs))
+    if len(devs) == 1:  # CPU container: both groups share the device
+        m = Mesh(np.array(devs), (axis_name,))
+        return m, m
+    tgt = Mesh(np.array(devs[:n_target]), (axis_name,))
+    drf = Mesh(np.array(devs[n_target:]), (axis_name,))
+    return tgt, drf
+
+
+def reshard_params(boxed_params, new_mesh, rules=None):
+    """Re-place a Param tree's values under ``new_mesh``'s shardings."""
+    sh = sharding_for_tree(new_mesh, boxed_params, rules)
+    vals = unbox(boxed_params)
+    return jax.tree.map(jax.device_put, vals, sh)
+
+
+def reshard_engine(engine, tparams_boxed, dparams_boxed, devices, n_target: int):
+    """Re-split devices as n_target:(rest) and re-shard both models.
+
+    Returns (engine', tparams_vals, dparams_vals) — caches are rebuilt by the
+    next generate() call; the draft tree is host-replicated state and moves
+    for free.
+    """
+    tgt, drf = submeshes(devices, n_target)
+    engine.mesh_target, engine.mesh_draft = tgt, drf
+    tvals = reshard_params(tparams_boxed, tgt)
+    dvals = reshard_params(dparams_boxed, drf)
+    return engine, tvals, dvals
+
+
+def replan_split(prof_run, n_devices: int):
+    """Re-run the allocation sweep after a topology change (thin wrapper so
+    callers don't import the scheduler directly)."""
+    from repro.core.scheduler import sweep_allocation
+
+    return sweep_allocation(n_devices, prof_run)

@@ -1,0 +1,27 @@
+from .rules import (
+    Param,
+    DEFAULT_RULES,
+    axes_of,
+    add_leading_axis,
+    constrain,
+    get_mesh,
+    set_mesh,
+    use_mesh,
+    spec_for,
+    sharding_for_tree,
+    unbox,
+)
+
+__all__ = [
+    "Param",
+    "DEFAULT_RULES",
+    "axes_of",
+    "add_leading_axis",
+    "constrain",
+    "get_mesh",
+    "set_mesh",
+    "use_mesh",
+    "spec_for",
+    "sharding_for_tree",
+    "unbox",
+]

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules and the mesh context.
+
+Every parameter in the model zoo is created as a ``Param(value, axes)`` where
+``axes`` names each dimension with a *logical* axis ("embed", "heads", "ff",
+...).  ``spec_for`` maps logical axes onto mesh axes through a rules table,
+falling back to replication whenever a dimension is not divisible by the mesh
+axis it would shard over (this is what makes every config lower on every mesh
+without per-arch special cases).
+
+Mesh axes used throughout:
+  "model" — tensor parallelism inside an ICI domain
+  "data"  — FSDP parameter/optimizer sharding + batch data parallelism
+  "pod"   — data parallelism across pods (DCN); params replicated per pod
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# -----------------------------------------------------------------------------
+# Param: an array boxed with its logical axis names (single source of truth).
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: tuple
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        shp = getattr(self.value, "shape", None)
+        return f"Param(shape={shp}, axes={self.axes})"
+
+
+def _param_flatten(p: Param):
+    return (p.value,), p.axes
+
+
+def _param_unflatten(axes, children):
+    return Param(children[0], axes)
+
+
+jax.tree_util.register_pytree_node(Param, _param_flatten, _param_unflatten)
+
+
+def unbox(tree):
+    """Param tree -> plain array tree."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def axes_of(tree):
+    """Param tree -> logical-axes tree (same structure as ``unbox``)."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def add_leading_axis(tree, name: str):
+    """Prepend a logical axis to every Param (after vmapped/stacked init)."""
+    return jax.tree.map(
+        lambda p: Param(p.value, (name,) + tuple(p.axes)),
+        tree,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+# -----------------------------------------------------------------------------
+# Logical -> mesh axis rules.
+# -----------------------------------------------------------------------------
+
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": "model",  # sequence parallelism (flags.seq_shard_acts)
+    "act_embed": None,
+    # weights: FSDP ("data") on the large replicated dim, TP ("model") on the
+    # split dim.  "pod" never shards weights (DCN all-gather too slow).
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,  # experts replicated; ff-within-expert sharded (TP-in-expert)
+    "experts_ep": "model",  # expert-parallel alternative (hillclimb)
+    "inner": "model",  # ssm / rwkv inner dim
+    "state": None,
+    "conv": None,
+    "lora": None,
+    "unit": None,
+    "layers": None,
+    # caches
+    "kv_seq": "model",  # decode-time KV cache sequence sharding
+    "cache_batch": ("pod", "data"),
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape.get(n, 1)
+    return size
+
+
+def spec_for(mesh: Mesh, axes, shape, rules=None) -> P:
+    """Build a PartitionSpec for ``shape`` whose dims carry logical ``axes``.
+
+    Falls back to replication per-dim when the mesh axis is absent or does not
+    divide the dim.  Guarantees no mesh axis is used twice in one spec.
+    """
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax)
+        if target is None:
+            out.append(None)
+            continue
+        names = (target,) if isinstance(target, str) else tuple(target)
+        names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+        size = _axis_size(mesh, names)
+        if not names or size == 1 or dim % size != 0:
+            # partial fallback: try dropping trailing axes until divisible
+            while names and (dim % _axis_size(mesh, names) != 0):
+                names = names[:-1]
+            if not names:
+                out.append(None)
+                continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    return P(*out)
+
+
+def sharding_for_tree(mesh: Mesh, params, rules=None):
+    """Param tree -> NamedSharding tree (same structure as ``unbox``)."""
+
+    def one(p: Param):
+        shape = jax.eval_shape(lambda x: x, p.value).shape if not hasattr(p.value, "shape") else p.value.shape
+        return NamedSharding(mesh, spec_for(mesh, p.axes, shape, rules))
+
+    return jax.tree.map(one, params, is_leaf=lambda x: isinstance(x, Param))
+
+
+# -----------------------------------------------------------------------------
+# Mesh context: models call ``constrain`` freely; it is the identity when no
+# mesh is active (single-device tests) and a sharding constraint otherwise.
+# -----------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+def set_mesh(mesh: Mesh | None):
+    _CTX.mesh = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return getattr(_CTX, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        set_mesh(prev)
+
+
+def constrain(x, *axes, rules=None):
+    """with_sharding_constraint under the active mesh; no-op without one."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(mesh, axes, x.shape, rules))
+    )

@@ -1,0 +1,45 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Multi-device tests spawn subprocesses that set the flag themselves.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.api import make_model
+
+
+@pytest.fixture(scope="session")
+def dense_pair():
+    """(target, draft) small dense models sharing a vocab, peaked logits."""
+    cfgT = ModelConfig(name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab_size=128)
+    cfgD = ModelConfig(name="d", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                       d_ff=64, vocab_size=128)
+    T, D = make_model(cfgT), make_model(cfgD)
+    tp = T.init(jax.random.PRNGKey(0))
+    dp = D.init(jax.random.PRNGKey(1))
+    tp["lm_head"].value = tp["lm_head"].value * 4.0  # peaked greedy chains
+    dp["lm_head"].value = dp["lm_head"].value * 4.0
+    return T, D, tp, dp
+
+
+def greedy_reference(model, params, prompt, n, S_max=256):
+    """Target-only greedy decoding (the spec-equality oracle)."""
+    pref = jax.jit(lambda p, t: model.prefill(p, tokens=t, S_max=S_max))
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, S_max))
+    lg, cache = pref(params, jnp.asarray(prompt))
+    cur = jnp.argmax(lg[:, -1, :], -1)[:, None].astype(jnp.int32)
+    out = [[int(cur[b, 0])] for b in range(prompt.shape[0])]
+    for _ in range(n - 1):
+        lg, cache = step(params, cache, cur)
+        cur = jnp.argmax(lg[:, -1, :], -1)[:, None].astype(jnp.int32)
+        for b in range(prompt.shape[0]):
+            out[b].append(int(cur[b, 0]))
+    return out

@@ -1,0 +1,79 @@
+"""The central system test (paper correctness contract): with greedy
+verification, speculative output equals target-only greedy decoding exactly —
+serial AND parallel (asynchronous, disaggregated) modes, any draft."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import greedy_reference
+from repro.configs import get_config
+from repro.core.engine import SpecConfig, SpecEngine
+from repro.models.api import make_model
+
+
+def _run(T, D, tp, dp, mode, prompt, max_new=24, **kw):
+    cfg = SpecConfig(bs=8, w=4, c=2, d=2, n_cap=64, mode=mode, max_new=max_new, **kw)
+    eng = SpecEngine(T, D, cfg, S_max_t=256, S_max_d=256)
+    return eng.generate(tp, dp, prompt)
+
+
+@pytest.mark.parametrize("mode", ["serial", "parallel"])
+def test_greedy_equality_independent_draft(dense_pair, mode):
+    T, D, tp, dp = dense_pair
+    prompt = (np.arange(1, 9, dtype=np.int32) % 128).reshape(1, 8)
+    ref = greedy_reference(T, tp, prompt, 24)
+    out, stats = _run(T, D, tp, dp, mode, prompt)
+    assert out[0] == ref[0]
+    assert stats.rounds > 0 and stats.emitted >= 24
+
+
+@pytest.mark.parametrize("mode", ["serial", "parallel"])
+def test_greedy_equality_self_draft(dense_pair, mode):
+    """draft == target: high acceptance, deep chains — stresses re-rooting."""
+    T, _, tp, _ = dense_pair
+    prompt = (np.arange(3, 11, dtype=np.int32) % 128).reshape(1, 8)
+    ref = greedy_reference(T, tp, prompt, 32)
+    out, stats = _run(T, T, tp, tp, mode, prompt, max_new=32)
+    assert out[0] == ref[0]
+    assert stats.compression_ratio > 1.2  # peaked logits -> real acceptance
+
+
+def test_greedy_equality_batched(dense_pair):
+    T, D, tp, dp = dense_pair
+    prompt = (np.arange(16, dtype=np.int32).reshape(2, 8) * 3 + 1) % 128
+    ref = greedy_reference(T, tp, prompt, 16)
+    out, _ = _run(T, D, tp, dp, "parallel", prompt, max_new=16)
+    assert out == ref
+
+
+def test_compression_parallel_close_to_serial(dense_pair):
+    """Paper Table 6: parallel trades a little compression (~9%) for overlap;
+    assert the parallel ratio stays within 50% of serial (qualitative)."""
+    T, _, tp, _ = dense_pair
+    prompt = (np.arange(5, 13, dtype=np.int32) % 128).reshape(1, 8)
+    _, st_serial = _run(T, T, tp, tp, "serial", prompt, max_new=32)
+    _, st_par = _run(T, T, tp, tp, "parallel", prompt, max_new=32)
+    assert st_par.compression_ratio > 0.5 * st_serial.compression_ratio
+
+
+def test_draft_bypass_still_exact(dense_pair):
+    """Straggler mitigation degrades to ~autoregressive but stays exact."""
+    T, D, tp, dp = dense_pair
+    prompt = (np.arange(2, 10, dtype=np.int32) % 128).reshape(1, 8)
+    ref = greedy_reference(T, tp, prompt, 12)
+    out, stats = _run(T, D, tp, dp, "parallel", prompt, max_new=12, draft_bypass=True)
+    assert out[0] == ref[0]
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "minicpm3-4b", "deepseek-moe-16b"])
+def test_greedy_equality_arch_families(arch):
+    """Tree spec holds across MoE and MLA attention variants (smoke configs)."""
+    cfg = get_config(arch, smoke=True)
+    T = make_model(cfg)
+    tp = T.init(jax.random.PRNGKey(0))
+    tp["lm_head"].value = tp["lm_head"].value * 4.0
+    prompt = (np.arange(1, 7, dtype=np.int32) % cfg.vocab_size).reshape(1, 6)
+    ref = greedy_reference(T, tp, prompt, 12)
+    out, _ = _run(T, T, tp, tp, "parallel", prompt, max_new=12)
+    assert out[0] == ref[0]

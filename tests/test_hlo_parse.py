@@ -1,0 +1,83 @@
+"""Loop-aware HLO cost model: exact agreement with XLA on loop-free modules,
+trip-scaling on (nested) scans, collective accounting under SPMD."""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_parse import analyze
+
+
+def _compiled(f, *avals):
+    return jax.jit(f).lower(*avals).compile()
+
+
+def test_matches_xla_on_loop_free():
+    c = _compiled(lambda a, b: a @ b,
+                  jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                  jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    mc = analyze(c.as_text())
+    assert mc.flops == c.cost_analysis()["flops"] == 2 * 256**3
+    assert mc.bytes_raw == c.cost_analysis()["bytes accessed"]
+
+
+def test_scan_trip_scaling():
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=8)
+        return y
+
+    c = _compiled(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                  jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    mc = analyze(c.as_text())
+    assert mc.flops == 8 * 2 * 128**3
+    assert list(mc.loop_trips.values()) == [8]
+    # XLA's own aggregate counts the body once — document the gap we fix
+    # (± a few scalar flops from the loop counter)
+    assert abs(c.cost_analysis()["flops"] - 2 * 128**3) < 100
+
+
+def test_nested_scan_trip_product():
+    def g(x, w):
+        def outer(c, _):
+            y, _ = jax.lax.scan(lambda cc, __: (cc @ w, None), c, None, length=4)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = _compiled(g, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                  jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    mc = analyze(c.as_text())
+    assert mc.flops == 12 * 2 * 64**3
+    assert sorted(mc.loop_trips.values()) == [3, 4]
+
+
+_SPMD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_parse import analyze
+
+mesh = jax.make_mesh((4,), ("model",))
+x = jax.ShapeDtypeStruct((64, 64), jnp.float32, sharding=NamedSharding(mesh, P(None, "model")))
+w = jax.ShapeDtypeStruct((64, 64), jnp.float32, sharding=NamedSharding(mesh, P("model", None)))
+
+def f(x, w):
+    y = x @ w  # contraction over the sharded dim -> all-reduce
+    return y
+
+c = jax.jit(f, out_shardings=NamedSharding(mesh, P(None, None))).lower(x, w).compile()
+mc = analyze(c.as_text())
+assert sum(mc.collective_count.values()) >= 1, mc.collective_count
+# all-reduce of the f32 [64,64] partial product: 16 KiB raw operand
+assert abs(mc.collective_bytes_raw - 64*64*4) < 1e-6, mc.collective_raw
+print("SPMD_PARSE_OK")
+"""
+
+
+def test_collectives_under_spmd_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SPMD_SCRIPT], capture_output=True,
+                       text=True, timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "SPMD_PARSE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]

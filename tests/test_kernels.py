@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU; the same calls compile to Mosaic on TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.quant.awq import dequantize, quantize_groupwise
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# -----------------------------------------------------------------------------
+# tree attention
+# -----------------------------------------------------------------------------
+
+TREE_SHAPES = [
+    # (B, n, Hq, Hkv, hd, S)
+    (2, 4, 8, 2, 64, 96),     # GQA g=4
+    (1, 8, 4, 4, 32, 128),    # MHA
+    (2, 3, 6, 3, 80, 200),    # odd hd / S (exercises padding)
+    (1, 16, 8, 1, 128, 256),  # MQA (granite-style kv=1)
+    (3, 1, 4, 2, 128, 64),    # single query (decode-like)
+]
+
+
+@pytest.mark.parametrize("shape", TREE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_attention_sweep(shape, dtype):
+    B, n, hq, hkv, hd, S = shape
+    q = _rand((B, n, hq, hd), dtype)
+    k = _rand((B, S, hkv, hd), dtype)
+    v = _rand((B, S, hkv, hd), dtype)
+    mask = jnp.asarray(RNG.random((B, n, S)) < 0.5)
+    mask = mask.at[:, 0, :].set(False)  # fully-masked row -> zeros
+    out = ops.tree_attention(q, k, v, mask)
+    want = ref.tree_attention_ref(q, k, v, mask)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    assert (np.asarray(out)[:, 0] == 0).all()
+
+
+def test_tree_attention_block_sizes():
+    B, n, hq, hkv, hd, S = 1, 4, 4, 2, 64, 384
+    q, k, v = _rand((B, n, hq, hd)), _rand((B, S, hkv, hd)), _rand((B, S, hkv, hd))
+    mask = jnp.asarray(RNG.random((B, n, S)) < 0.7)
+    want = ref.tree_attention_ref(q, k, v, mask)
+    for bk in (128, 256):
+        out = ops.tree_attention(q, k, v, mask, block_k=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# -----------------------------------------------------------------------------
+# decode attention (split-KV single kernel)
+# -----------------------------------------------------------------------------
+
+DECODE_SHAPES = [(2, 8, 2, 64, 160), (3, 4, 4, 48, 100), (1, 32, 8, 128, 512), (2, 4, 1, 64, 96)]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+def test_decode_attention_sweep(shape):
+    B, hq, hkv, hd, S = shape
+    q = _rand((B, hq, hd))
+    k = _rand((B, S, hkv, hd))
+    v = _rand((B, S, hkv, hd))
+    length = jnp.asarray(RNG.integers(1, S + 1, size=(B,)), jnp.int32)
+    out = ops.decode_attention(q, k, v, length)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_tree_attention():
+    """The split-KV decode kernel is the length-masked special case."""
+    B, hq, hkv, hd, S = 2, 8, 4, 64, 192
+    q, k, v = _rand((B, hq, hd)), _rand((B, S, hkv, hd)), _rand((B, S, hkv, hd))
+    length = jnp.asarray([64, 100], jnp.int32)
+    mask = jnp.arange(S)[None, None, :] < length[:, None, None]
+    a = ops.decode_attention(q, k, v, length)
+    b = ops.tree_attention(q[:, None], k, v, mask)[:, 0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+# -----------------------------------------------------------------------------
+# fused SwiGLU
+# -----------------------------------------------------------------------------
+
+
+@given(st.sampled_from([(8, 64, 128), (100, 96, 200), (1, 256, 64), (130, 128, 384)]),
+       st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=8, deadline=None)
+def test_fused_swiglu(shape, dtype):
+    T, d, ff = shape
+    dt = jnp.dtype(dtype)
+    x = _rand((T, d), dt)
+    wg = _rand((d, ff), dt, 0.1)
+    wu = _rand((d, ff), dt, 0.1)
+    out = ops.fused_swiglu(x, wg, wu)
+    want = ref.fused_swiglu_ref(x, wg, wu)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -----------------------------------------------------------------------------
+# int4 AWQ dequant-GEMM
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 256, 96), (32, 128, 300), (5, 384, 128)])
+def test_int4_matmul(shape):
+    T, K, N = shape
+    g = 128
+    x = _rand((T, K))
+    w = _rand((K, N), scale=0.05)
+    qd = quantize_groupwise(w, g)
+    out = ops.int4_matmul(x, qd.qweight, qd.scales, qd.zeros, group_size=g)
+    want = x @ dequantize(qd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_int4_quant_error_bounded():
+    """Groupwise 4-bit: max reconstruction error <= scale/2 per element."""
+    w = _rand((256, 64), scale=0.1)
+    qd = quantize_groupwise(w, 128)
+    err = np.abs(np.asarray(dequantize(qd) - w))
+    smax = np.repeat(np.asarray(qd.scales), 128, axis=0)
+    assert (err <= smax / 2 + 1e-6).all()

@@ -1,0 +1,102 @@
+"""Per-arch smoke tests (assignment requirement): every assigned architecture
+instantiates a reduced same-family config, runs forward/train + prefill/decode
+on CPU, asserts shapes + finiteness + cache-path consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.api import make_model
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_train(arch):
+    cfg = get_config(arch, smoke=True)
+    m = make_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 7 + 3) % cfg.vocab_size
+    kw = {}
+    if cfg.n_enc_tokens:
+        kw["enc"] = jnp.full((B, cfg.n_enc_tokens, cfg.d_model), 0.01, jnp.float32)
+    if cfg.embed_inputs:
+        logits = m.forward_train(params, tokens=toks, **kw)
+    else:
+        emb = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.02
+        logits = m.forward_train(params, embeds=emb, **kw)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Cache-path consistency: prefill(S) then decode(1) must produce the same
+    next-token logits as a full forward over S+1 tokens."""
+    cfg = get_config(arch, smoke=True)
+    if not cfg.embed_inputs:
+        pytest.skip("stub-frontend arch: decode path tested via engine tests")
+    m = make_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 10
+    toks = (jnp.arange(B * (S + 1), dtype=jnp.int32).reshape(B, S + 1) * 5 + 2) % cfg.vocab_size
+    kw = {}
+    if cfg.n_enc_tokens:
+        kw["enc"] = jnp.full((B, cfg.n_enc_tokens, cfg.d_model), 0.01, jnp.float32)
+
+    full = m.forward_train(params, tokens=toks, **kw)  # [B, S+1, V]
+    _, cache = m.prefill(params, tokens=toks[:, :S], S_max=32, **kw)
+    dec, _ = m.decode_step(params, cache, toks[:, S:], 32)
+
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0], np.float32), np.asarray(full[:, S], np.float32),
+        atol=2e-3, rtol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step_no_nans(arch):
+    """One fwd+bwd+AdamW step per arch: finite loss, finite updated params."""
+    from repro.launch.steps import make_train_step
+    from repro.optim import adamw_init
+
+    cfg = get_config(arch, smoke=True)
+    m = make_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = make_train_step(cfg, m)
+    B, S = 2, 8
+    toks = (jnp.arange(B * (S + 1), dtype=jnp.int32).reshape(B, S + 1) * 3 + 1) % cfg.vocab_size
+    batch = {"tokens": toks}
+    if not cfg.embed_inputs:
+        batch = {
+            "embeds": jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.02,
+            "labels": toks[:, 1:],
+        }
+    if cfg.n_enc_tokens:
+        batch["enc"] = jnp.full((B, cfg.n_enc_tokens, cfg.d_model), 0.01, jnp.float32)
+    new_params, new_opt, loss = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(loss)), arch
+    assert bool(jnp.isfinite(new_params["lm_head"].value).all())
+    assert int(new_opt.step) == 1
+
+
+def test_wkv_chunked_equals_stepwise():
+    """§Perf B2: the chunked segment-sum WKV form must match the per-step
+    recurrence (same contract as the mamba2 chunk/step pair)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import rwkv6 as rk
+
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 48, 3, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32) for _ in range(3))
+    logw = -jnp.asarray(rng.random((B, S, H, hd)) * 2 + 0.01, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)), jnp.float32)
+    y1, sf1 = rk._wkv_scan(r, k, v, jnp.exp(logw), u, s0)
+    y2, sf2 = rk._wkv_chunked(r, k, v, logw, u, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(sf1), np.asarray(sf2), atol=5e-4, rtol=5e-4)

@@ -1,0 +1,163 @@
+"""Draft-tree algebra unit + property tests (paper §3.1–3.2).
+
+Hypothesis drives random expansion/verification trajectories and asserts the
+structural invariants that KV-cache consistency rests on:
+  * node 0 is the root; every valid node's ancestors are valid and expanded;
+  * weights are non-increasing along root→leaf paths;
+  * select_batch returns an ancestor-closed, weight-sorted subgraph;
+  * after reroot: surviving nodes are exactly the old root-child subtree,
+    compacted; accepted-path KV moves into the prefix; no surviving KV row
+    is lost or duplicated.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as T
+
+N_CAP = 32
+C = 2
+S_MAX = 128
+
+
+def build_tree(seed: int, n_expansions: int, w: int = 3):
+    rng = np.random.default_rng(seed)
+    tr = T.init_tree(N_CAP)
+    logits = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    tr = T.seed_root(tr, token=5, plen=10, root_logits=jnp.pad(logits, (0, 0)), c=C)
+    for _ in range(n_expansions):
+        ids, valid = T.select_leaves(tr, w)
+        toks, rows, pos, mask, _ = T.leaf_inputs(tr, ids, valid, S_MAX)
+        ct = jnp.asarray(rng.integers(0, 64, size=(w, C)), jnp.int32)
+        cl = jnp.asarray(-rng.random((w, C)), jnp.float32)
+        cl = -jnp.sort(-cl, axis=1)  # children sorted by prob, like top_k
+        tr = T.insert_children(tr, ids, valid, rows, ct, cl)
+    return tr
+
+
+def _np(t):
+    return jax.tree.map(np.asarray, t)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_tree_structural_invariants(seed, n_exp):
+    tr = _np(build_tree(seed, n_exp))
+    n = int(tr.n_nodes)
+    assert 1 <= n <= N_CAP
+    assert tr.parent[0] == -1 and tr.valid[0] and tr.expanded[0]
+    for i in range(1, n):
+        if not tr.valid[i]:
+            continue
+        p = int(tr.parent[i])
+        assert 0 <= p < i, "parents precede children"
+        assert tr.valid[p] and tr.expanded[p]
+        assert tr.weight[i] <= tr.weight[p] + 1e-6
+        assert tr.depth[i] == tr.depth[p] + 1
+        if tr.kv_row[i] >= 0:
+            assert tr.expanded[i]
+
+
+@given(st.integers(0, 10_000), st.integers(1, 5), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_select_batch_ancestor_closed(seed, n_exp, bs):
+    tr = build_tree(seed, n_exp)
+    plan = T.select_batch(tr, bs, S_MAX)
+    plan = _np(plan)
+    trn = _np(tr)
+    ids = plan.node_ids
+    assert plan.valid[0] and ids[0] == 0, "slot 0 is the root"
+    sel = set(int(i) for i, v in zip(ids, plan.valid) if v)
+    for i, v in zip(ids, plan.valid):
+        if not v or int(i) == 0:
+            continue
+        assert int(trn.parent[int(i)]) in sel, "ancestor-closed subgraph"
+    # weights are the bs best among valid nodes
+    w_sel = sorted((float(trn.weight[i]) for i in sel), reverse=True)
+    w_all = sorted((float(w) for w, v in zip(trn.weight, trn.valid) if v), reverse=True)
+    assert np.allclose(w_sel, w_all[: len(w_sel)], atol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4), st.data())
+@settings(max_examples=25, deadline=None)
+def test_reroot_consistency(seed, n_exp, data):
+    tr = build_tree(seed, n_exp)
+    bs = 6
+    plan = T.select_batch(tr, bs, S_MAX)
+    trn, plann = _np(tr), _np(plan)
+
+    # drive verify_walk with arbitrary "target argmax" choices
+    argmax = data.draw(st.lists(st.integers(0, 63), min_size=bs, max_size=bs))
+    acc_pos, n_acc, bonus, emitted, n_emitted = T.verify_walk(
+        plan.tokens, plan.parent_pos, plan.valid, jnp.asarray(argmax, jnp.int32)
+    )
+    tr2, move, fill = T.reroot(tr, plan.node_ids, acc_pos, n_acc, bonus)
+    tr2n, moven = _np(tr2), _np(move)
+
+    # --- prefix bookkeeping -------------------------------------------------
+    assert int(tr2n.plen) == int(trn.plen) + int(n_acc) + 1
+    assert tr2n.parent[0] == -1 and tr2n.valid[0]
+    assert int(tr2n.tokens[0]) == int(bonus)
+    assert tr2n.weight[0] == 0.0 and tr2n.depth[0] == 0
+
+    # --- surviving subtree --------------------------------------------------
+    n2 = int(tr2n.n_nodes)
+    for i in range(1, n2):
+        p = int(tr2n.parent[i])
+        assert 0 <= p < i
+        assert tr2n.weight[i] <= tr2n.weight[p] + 1e-6
+
+    # --- KV moves: no duplicate destinations, accepted rows -> prefix -------
+    dsts = moven.dst[moven.mask]
+    assert len(set(dsts.tolist())) == len(dsts), "KV destinations unique"
+    srcs = moven.src[moven.mask]
+    assert (srcs >= 0).all()
+    n_prefix_moves = int((dsts < tr2n.plen).sum())
+    assert n_prefix_moves <= int(n_acc) + 1
+
+    # --- accepted-path prefix rows are covered exactly once: every row in
+    # [plen_old, plen_new-1) comes from either a KV move or a fill forward
+    filln = _np(fill)
+    covered = sorted(
+        [int(d) for d in dsts if int(trn.plen) <= d < int(tr2n.plen) - 1]
+        + [int(r) for r, mk in zip(filln.rows, filln.mask) if mk]
+    )
+    expect = list(range(int(trn.plen), int(tr2n.plen) - 1))
+    assert covered == expect, (covered, expect)
+
+
+def test_verify_walk_greedy_path():
+    """Deterministic example: walk accepts exactly the argmax chain."""
+    tokens = jnp.asarray([5, 7, 9, 11], jnp.int32)  # slot 0 = root
+    parent_pos = jnp.asarray([-1, 0, 1, 0], jnp.int32)
+    valid = jnp.ones(4, bool)
+    # argmax: root->7 (slot1), slot1->9 (slot2), slot2->42 (not in tree)
+    argmax = jnp.asarray([7, 9, 42, 0], jnp.int32)
+    acc, n_acc, bonus, emitted, n_emitted = T.verify_walk(tokens, parent_pos, valid, argmax)
+    assert int(n_acc) == 2 and int(bonus) == 42
+    assert np.asarray(emitted)[:3].tolist() == [7, 9, 42]
+    assert int(n_emitted) == 3
+
+
+def test_rows_mask_non_square():
+    """The paper's non-square mask: leaves attend prefix + ancestors + self."""
+    tr = build_tree(0, 2)
+    ids, valid = T.select_leaves(tr, 3)
+    toks, rows, pos, mask, _ = T.leaf_inputs(tr, ids, valid, S_MAX)
+    trn, maskn, idsn, rowsn = _np(tr), np.asarray(mask), np.asarray(ids), np.asarray(rows)
+    for q in range(3):
+        if not np.asarray(valid)[q]:
+            assert not maskn[q].any()
+            continue
+        assert maskn[q, : int(trn.plen)].all(), "prefix rows visible"
+        assert maskn[q, int(rowsn[q])], "self row visible"
+        # ancestors' kv rows visible
+        node = int(idsn[q])
+        p = int(trn.parent[node])
+        while p >= 0:
+            r = int(trn.kv_row[p])
+            if r >= 0:
+                assert maskn[q, r]
+            p = int(trn.parent[p])
