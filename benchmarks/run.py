@@ -14,7 +14,16 @@ import sys
 import time
 import traceback
 
-from benchmarks import ablation, allocation, compression, e2e, kernel_micro, parallel_vs_serial, tp_scaling
+from benchmarks import (
+    ablation,
+    allocation,
+    compression,
+    e2e,
+    kernel_micro,
+    parallel_vs_serial,
+    serving,
+    tp_scaling,
+)
 
 BENCHES = {
     "table1": ("Paper Table 1  — TP scaling per model size", tp_scaling.run),
@@ -24,6 +33,7 @@ BENCHES = {
     "fig8": ("Paper Figure 8 — ablation (parallel x kernels)", ablation.run),
     "table7": ("Paper Tables 3/7 — kernel micro-benchmarks", kernel_micro.run),
     "fig9": ("Paper Figure 9 — draft/target allocation sweep", allocation.run),
+    "serving": ("Serving — continuous-batching offered-throughput sweep", serving.run),
 }
 
 

@@ -1,0 +1,66 @@
+"""Continuous-batching serving demo (tiny models, CPU-friendly).
+
+  PYTHONPATH=src python examples/continuous_serving.py
+
+Submits a seeded Poisson trace of 6 requests to a 2-slot
+ContinuousBatchingRuntime and streams each request's tokens as they are
+verified.  Watch the telemetry: requests are admitted while their neighbors
+are mid-decode (overlapping round intervals), retiring slots are backfilled
+from the queue, and each request gets its own TTFT / tok/s / acceptance row.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecConfig, SpecEngine
+from repro.data import make_request_trace
+from repro.models.api import make_model
+from repro.serving import ContinuousBatchingRuntime, Request, VirtualClock
+
+cfgT = ModelConfig(name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                   d_ff=128, vocab_size=128)
+cfgD = ModelConfig(name="d", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=128)
+T, D = make_model(cfgT), make_model(cfgD)
+tp, dp = T.init(jax.random.PRNGKey(0)), D.init(jax.random.PRNGKey(1))
+tp["lm_head"].value = tp["lm_head"].value * 4.0  # peaked greedy chains
+dp["lm_head"].value = dp["lm_head"].value * 4.0
+
+engine = SpecEngine(T, D, SpecConfig(bs=8, w=4, c=2, d=2, max_new=24),
+                    S_max_t=256, S_max_d=256)
+
+trace = make_request_trace(cfgT.vocab_size, 6, rate_rps=1.0, prompt_len=(8, 16),
+                           max_new=24, seed=42)
+
+
+def stream(rid, tokens, done):
+    tail = "  <done>" if done else ""
+    print(f"  req {rid}: +{len(tokens)} tokens {tokens}{tail}")
+
+
+runtime = ContinuousBatchingRuntime(
+    engine, tp, dp, n_slots=2,
+    clock=VirtualClock(round_dt=0.25),  # deterministic replay: 4 rounds/virtual s
+    stream=stream,
+)
+runtime.submit_trace(
+    Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new)
+    for r in trace
+)
+results = runtime.run()
+
+print()
+print(runtime.stats.report())
+
+# the runtime's outputs are byte-identical to solo generate() runs
+for r in trace:
+    solo, _ = engine.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+    assert results[r.rid] == solo[0]
+print(f"\nall {len(results)} outputs byte-identical to solo generate() — continuous "
+      f"batching changed the schedule, not the tokens")

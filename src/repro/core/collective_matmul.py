@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding import shard_map
+
 
 def matmul_allreduce(x, w, mesh, axis: str = "model"):
     """y = x @ w with w K-sharded over ``axis``; all-reduce fused via
@@ -38,7 +40,7 @@ def matmul_allreduce(x, w, mesh, axis: str = "model"):
         scat = jax.lax.psum_scatter(part, axis, scatter_dimension=1, tiled=True)
         return jax.lax.all_gather(scat, axis, axis=1, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(None, None),
@@ -51,7 +53,9 @@ def matmul_ag_pipelined(x, w, mesh, axis: str = "model"):
     local GEMM runs (collective-matmul proper: O(K/p) resident activations).
     """
     def body(x_loc, w_loc):
-        p = jax.lax.axis_size(axis)
+        # static axis extent from the mesh (jax.lax.axis_size is newer jax,
+        # and the ring permutation below needs a Python int anyway)
+        p = mesh.shape[axis]
         idx = jax.lax.axis_index(axis)
         perm = [(i, (i + 1) % p) for i in range(p)]
         kshard = w_loc.shape[0] // p
@@ -68,7 +72,7 @@ def matmul_ag_pipelined(x, w, mesh, axis: str = "model"):
         (_, acc), _ = jax.lax.scan(step, (x_loc, acc0), jnp.arange(p))
         return acc
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(None, axis), P(None, None)),
         out_specs=P(None, None),

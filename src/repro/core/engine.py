@@ -44,11 +44,38 @@ class SpecConfig:
 
 @dataclasses.dataclass
 class SpecStats:
+    """Per-row exact accounting: ``emitted_rows``/``accepted_rows`` hold one
+    running total per batch row, accumulated round by round; the scalar
+    ``emitted``/``accepted`` views are per-row means derived at read time
+    (the old per-round ``sum // B`` floor silently dropped tokens whenever
+    rows emitted unequal counts)."""
+
     rounds: int = 0
-    emitted: int = 0
-    accepted: int = 0
     draft_steps: int = 0
     wall_s: float = 0.0
+    emitted_rows: np.ndarray | None = None  # i64[B] per-row emitted totals
+    accepted_rows: np.ndarray | None = None  # i64[B] per-row accepted totals
+
+    def add_round(self, n_emitted, n_accepted):
+        n_emitted = np.asarray(n_emitted, np.int64)
+        if self.emitted_rows is None:
+            self.emitted_rows = np.zeros_like(n_emitted)
+            self.accepted_rows = np.zeros_like(n_emitted)
+        self.emitted_rows += n_emitted
+        self.accepted_rows += np.asarray(n_accepted, np.int64)
+        self.rounds += 1
+
+    @property
+    def emitted(self) -> float:
+        return 0.0 if self.emitted_rows is None else float(self.emitted_rows.mean())
+
+    @property
+    def accepted(self) -> float:
+        return 0.0 if self.accepted_rows is None else float(self.accepted_rows.mean())
+
+    @property
+    def total_emitted(self) -> int:
+        return 0 if self.emitted_rows is None else int(self.emitted_rows.sum())
 
     @property
     def tokens_per_round(self) -> float:
@@ -58,6 +85,46 @@ class SpecStats:
     def compression_ratio(self) -> float:
         """Paper's metric: tokens per target-model inference."""
         return self.tokens_per_round
+
+
+@dataclasses.dataclass
+class EngineState:
+    """Device-side state of one decode batch, advanced by ``SpecEngine.step``.
+
+    Treat it linearly: the jitted steps donate their cache/tree buffers, so a
+    state consumed by step()/admit_slot()/release_slot() must not be reused —
+    always thread the returned state forward (generate() and the serving
+    runtime both do)."""
+
+    tcache: Any  # target KV cache [U, B, S_max_t, ...]
+    dcache: Any  # draft KV cache [U, B, S_max_d, ...]
+    tr: Any  # stacked Tree, leaves [B, ...]
+    plan: Any  # BatchPlan for the NEXT verification, leaves [B, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepResult:
+    """Host-side outcome of one round, per batch row."""
+
+    emitted: np.ndarray  # i32[B, bs+1] verified tokens (accepted + bonus)
+    n_emitted: np.ndarray  # i32[B]
+    n_accepted: np.ndarray  # i32[B]
+
+
+def absorb_emitted(out: list, emitted_row, n_emitted: int, max_new: int, eos_id: int):
+    """Append one row's verified tokens to ``out`` until EOS or ``max_new``.
+
+    The single definition of truncation semantics (token appended first, then
+    tested) shared by generate() and the serving runtime — the byte-identical
+    serving contract depends on both paths stopping on exactly the same token.
+    Returns (new_tokens, done)."""
+    new = []
+    for t in emitted_row[:n_emitted].tolist():
+        out.append(int(t))
+        new.append(int(t))
+        if (eos_id >= 0 and t == eos_id) or len(out) >= max_new:
+            return new, True
+    return new, False
 
 
 class SpecEngine:
@@ -126,76 +193,161 @@ class SpecEngine:
         self._verify = jax.jit(verify, donate_argnums=(1,))
         self._dprefill = jax.jit(lambda p, t, S: draft.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
         self._tprefill = jax.jit(lambda p, t, S: target.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
+        # per-slot lifecycle (continuous batching); slot/plen are traced so
+        # one compile covers every slot index and prompt length
+        self._install = jax.jit(kvm.install_slot, donate_argnums=(0,))
+        self._zero_slot = jax.jit(kvm.zero_slot, donate_argnums=(0,))
+        self._reset_slot = jax.jit(T.reset_slot, donate_argnums=(0,))
+        self._seed_slot = jax.jit(
+            lambda tr, slot, tok, plen, lg: T.seed_slot(tr, slot, tok, plen, lg, c.c),
+            donate_argnums=(0,),
+        )
+
+    # ------------------------------------------------------------------
+    # state lifecycle (used by generate() below and by serving/runtime.py)
+    # ------------------------------------------------------------------
+    @property
+    def grow_per_round(self) -> int:
+        """Expansions needed to refill a re-rooted tree to >= bs nodes."""
+        c = self.cfg
+        return max(1, -(-(c.bs) // (c.w * c.c)))
+
+    def init_state(self, B: int) -> EngineState:
+        """Empty B-slot serving state: zero caches, parked (invalid) trees.
+
+        Parked slots are inert: their plans carry no valid node, so verify
+        writes nothing and expand skips them; the runtime discards whatever
+        they "emit"."""
+        tcache = self.target.init_cache(B, self.S_max_t)
+        dcache = self.draft.init_cache(B, self.S_max_d)
+        tr = jax.tree.map(lambda x: jnp.stack([x] * B), T.init_tree(self.cfg.n_cap))
+        with use_mesh(self.mesh_draft):
+            plan = self._select_plan(tr)
+        return EngineState(tcache, dcache, tr, plan)
+
+    def _prefill_state(self, tparams, dparams, prompt) -> EngineState:
+        """Whole-batch prefill + tree seed + initial growth (all rows start
+        together — the generate() path)."""
+        c = self.cfg
+        B, P = prompt.shape
+        with use_mesh(self.mesh_draft):
+            dlogits, dcache = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
+        with use_mesh(self.mesh_target):
+            _, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
+        tr = jax.tree.map(lambda x: jnp.stack([x] * B), T.init_tree(c.n_cap))
+        root_tok = jnp.asarray(prompt[:, -1], jnp.int32)
+        with use_mesh(self.mesh_draft):
+            tr = self._seed(tr, root_tok, P, dlogits[:, -1, :])
+            for _ in range(self.grow_per_round):
+                tr, dcache = self._expand(dparams, tr, dcache)
+            plan = self._select_plan(tr)
+        return EngineState(tcache, dcache, tr, plan)
+
+    def admit_slot(self, tparams, dparams, state: EngineState, slot: int, prompt) -> EngineState:
+        """Admit one request into batch row ``slot`` of an in-flight state.
+
+        The request is prefilled solo ([1, P] — byte-identical numerics to a
+        solo generate() start), its cache rows installed into row ``slot`` of
+        both serving caches, its tree re-seeded with its own prefix length,
+        and the batch grown/re-planned so the next verify covers it.
+        Neighboring rows' caches and trees are untouched (they only gain
+        extra draft expansions, which never changes emitted tokens — the
+        greedy-verification invariant)."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        P = prompt.shape[1]
+        with use_mesh(self.mesh_draft):
+            dlogits, dcache1 = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
+        with use_mesh(self.mesh_target):
+            _, tcache1 = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
+            tcache = self._install(state.tcache, tcache1, slot)
+        with use_mesh(self.mesh_draft):
+            dcache = self._install(state.dcache, dcache1, slot)
+            tr = self._seed_slot(
+                state.tr, slot, jnp.asarray(prompt[0, -1], jnp.int32),
+                jnp.asarray(P, jnp.int32), dlogits[0, -1, :],
+            )
+            for _ in range(self.grow_per_round):
+                tr, dcache = self._expand(dparams, tr, dcache)
+            plan = self._select_plan(tr)
+        return EngineState(tcache, dcache, tr, plan)
+
+    def release_slot(self, state: EngineState, slot: int) -> EngineState:
+        """Retire batch row ``slot``: park its tree and physically zero its
+        KV rows in both caches, so no state can leak into the next occupant."""
+        with use_mesh(self.mesh_target):
+            tcache = self._zero_slot(state.tcache, slot)
+        with use_mesh(self.mesh_draft):
+            dcache = self._zero_slot(state.dcache, slot)
+            tr = self._reset_slot(state.tr, slot)
+            plan = self._select_plan(tr)
+        return EngineState(tcache, dcache, tr, plan)
+
+    def step(self, tparams, dparams, state: EngineState, stats: SpecStats | None = None):
+        """One asynchronous round for every slot (the body of generate()):
+        dispatch verification on the target group, concurrently expand the
+        draft trees, sync the verified tokens to the host, then re-root /
+        fill / grow / re-plan on the draft group.
+
+        Returns (state', StepResult).  Rows at different decode depths
+        coexist: all per-row quantities (prefix length, masks, acceptance)
+        live in the vmapped tree, so the serving runtime can drive rows with
+        mixed progress through the same jitted round."""
+        c = self.cfg
+        plan = self._bypass(state.plan) if c.draft_bypass else state.plan
+        tr, dcache = state.tr, state.dcache
+        draft_steps = 0
+        # --- dispatch verification on the target group (async) -------------
+        with use_mesh(self.mesh_target):
+            acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
+                tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
+                plan.mask, plan.parent_pos, plan.valid,
+            )
+        # --- concurrently: d tree expansions on the draft group ------------
+        if c.mode == "parallel":
+            with use_mesh(self.mesh_draft):
+                for _ in range(c.d):
+                    tr, dcache = self._expand(dparams, tr, dcache)
+                draft_steps += c.d
+        # --- sync point: verified tokens cross groups (host-mediated) ------
+        emitted_h = np.asarray(jax.device_get(emitted))
+        n_emitted_h = np.asarray(jax.device_get(n_emitted))
+        n_acc_h = np.asarray(jax.device_get(n_acc))
+        # --- re-root, fill, grow, select next batch (draft group) ----------
+        with use_mesh(self.mesh_draft):
+            tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
+            n_grow = c.d if c.mode == "serial" else self.grow_per_round
+            for _ in range(n_grow):
+                tr, dcache = self._expand(dparams, tr, dcache)
+            draft_steps += n_grow
+            new_plan = self._select_plan(tr)
+        if stats is not None:
+            stats.add_round(n_emitted_h, n_acc_h)
+            stats.draft_steps += draft_steps
+        return EngineState(tcache, dcache, tr, new_plan), StepResult(emitted_h, n_emitted_h, n_acc_h)
 
     # ---------------------------------------------------------------------
-    def generate(self, tparams, dparams, prompt, max_new=None, collect_stats=True):
+    def generate(self, tparams, dparams, prompt, max_new=None):
         """prompt: np.ndarray [B, P] int32. Returns (tokens [B, <=max_new] list, stats)."""
         c = self.cfg
         max_new = max_new or c.max_new
         B, P = prompt.shape
         t0 = time.perf_counter()
 
-        with use_mesh(self.mesh_draft):
-            dlogits, dcache = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
-        with use_mesh(self.mesh_target):
-            _, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
-
-        t0tree = T.init_tree(c.n_cap)
-        tr = jax.tree.map(lambda x: jnp.stack([x] * B), t0tree)
-        root_tok = jnp.asarray(prompt[:, -1], jnp.int32)
-        with use_mesh(self.mesh_draft):
-            tr = self._seed(tr, root_tok, P, dlogits[:, -1, :])
-            # initial growth to >= bs nodes
-            g0 = max(1, -(-(c.bs) // (c.w * c.c)))
-            for _ in range(g0):
-                tr, dcache = self._expand(dparams, tr, dcache)
-            plan = self._select_plan(tr)
-
+        state = self._prefill_state(tparams, dparams, prompt)
         out = [[] for _ in range(B)]
         done = np.zeros(B, bool)
         stats = SpecStats()
         rounds_cap = max_new + 2  # greedy emits >=1 token/round
 
         for _ in range(rounds_cap):
-            if done.all() or (P + stats.emitted + 2 * c.bs) >= min(self.S_max_t, self.S_max_d):
+            longest = 0 if stats.emitted_rows is None else int(stats.emitted_rows.max())
+            if done.all() or (P + longest + 2 * c.bs) >= min(self.S_max_t, self.S_max_d):
                 break
-            if c.draft_bypass:
-                plan = self._bypass(plan)
-            # --- dispatch verification on the target group (async) ---------
-            with use_mesh(self.mesh_target):
-                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
-                    tparams, tcache, plan.tokens, plan.positions, plan.rows,
-                    plan.mask, plan.parent_pos, plan.valid,
-                )
-            # --- concurrently: d tree expansions on the draft group --------
-            if c.mode == "parallel":
-                with use_mesh(self.mesh_draft):
-                    for _ in range(c.d):
-                        tr, dcache = self._expand(dparams, tr, dcache)
-                    stats.draft_steps += c.d
-            # --- sync point: verified tokens cross groups (host-mediated) --
-            emitted_h = np.asarray(jax.device_get(emitted))
-            n_emitted_h = np.asarray(jax.device_get(n_emitted))
+            state, res = self.step(tparams, dparams, state, stats=stats)
             for b in range(B):
                 if not done[b]:
-                    toks = emitted_h[b, : n_emitted_h[b]].tolist()
-                    for t in toks:
-                        out[b].append(int(t))
-                        if (c.eos_id >= 0 and t == c.eos_id) or len(out[b]) >= max_new:
-                            done[b] = True
-                            break
-            stats.rounds += 1
-            stats.emitted += int(n_emitted_h.sum()) // max(B, 1)
-            stats.accepted += int(np.asarray(jax.device_get(n_acc)).sum()) // max(B, 1)
-
-            # --- re-root, fill, grow, select next batch (draft group) ------
-            with use_mesh(self.mesh_draft):
-                tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
-                n_grow = c.d if c.mode == "serial" else max(1, -(-(c.bs) // (c.w * c.c)))
-                for _ in range(n_grow):
-                    tr, dcache = self._expand(dparams, tr, dcache)
-                stats.draft_steps += n_grow
-                plan = self._select_plan(tr)
+                    _, done[b] = absorb_emitted(
+                        out[b], res.emitted[b], res.n_emitted[b], max_new, c.eos_id)
 
         stats.wall_s = time.perf_counter() - t0
         return out, stats

@@ -47,3 +47,35 @@ def apply_moves(cache, src, dst, mask):
 
 def set_length(cache, new_len):
     return {**cache, "len": jnp.asarray(new_len, jnp.int32)}
+
+
+# -----------------------------------------------------------------------------
+# per-slot (batch-row) lifecycle — continuous-batching serving (serving/)
+# -----------------------------------------------------------------------------
+# A "slot" is one batch row of a long-lived serving cache.  Requests are
+# admitted into free slots (install_slot: copy a fresh single-request prefill
+# cache into the row) and retired (zero_slot: physically clear the row so no
+# KV can leak into the slot's next occupant).  Both touch EVERY array leaf —
+# attention K/V rows and recurrent states alike — and leave the global "len"
+# scalar alone: per-slot length bookkeeping lives in the per-row tree
+# (tree.plen); spec_forward masks are explicit and never read "len".
+
+
+def install_slot(cache, src, slot):
+    """Copy batch row 0 of single-request cache ``src`` into batch row
+    ``slot`` of ``cache``.  ``slot`` may be traced (one jit for all slots)."""
+
+    def copy(big, one):
+        return big.at[:, slot].set(one[:, 0].astype(big.dtype))
+
+    return {"len": cache["len"], "groups": jax.tree.map(copy, cache["groups"], src["groups"])}
+
+
+def zero_slot(cache, slot):
+    """Zero batch row ``slot`` of every cache leaf (retired-slot hygiene:
+    a recycled slot starts from provably clean state)."""
+
+    def clear(x):
+        return x.at[:, slot].set(jnp.zeros_like(x[:, 0]))
+
+    return {"len": cache["len"], "groups": jax.tree.map(clear, cache["groups"])}

@@ -130,6 +130,33 @@ def seed_root(tree: Tree, token, plen, root_logits, c: int) -> Tree:
 
 
 # -----------------------------------------------------------------------------
+# per-slot lifecycle on a batched (stacked) tree — serving runtime
+# -----------------------------------------------------------------------------
+# The engine vmaps the single-request algebra above over a stacked Tree whose
+# leaves carry a leading slot axis [B, ...].  Continuous batching admits and
+# retires requests one slot at a time; these two helpers rewrite exactly one
+# batch row without disturbing in-flight neighbors.
+
+
+def seed_slot(tr: Tree, slot, token, plen, root_logits, c: int) -> Tree:
+    """Re-seed batch row ``slot`` of a stacked Tree for a newly admitted
+    request (root = last prompt token at prefix row ``plen - 1``).  ``slot``
+    and ``plen`` may be traced, so one jit covers every slot and prompt
+    length."""
+    n_cap = tr.tokens.shape[1]
+    fresh = seed_root(init_tree(n_cap), token, plen, root_logits, c)
+    return jax.tree.map(lambda full, one: full.at[slot].set(one), tr, fresh)
+
+
+def reset_slot(tr: Tree, slot) -> Tree:
+    """Park batch row ``slot``: restore the empty init_tree state (no valid
+    nodes), making the slot inert in expand/verify until its next admission."""
+    n_cap = tr.tokens.shape[1]
+    fresh = init_tree(n_cap)
+    return jax.tree.map(lambda full, one: full.at[slot].set(one), tr, fresh)
+
+
+# -----------------------------------------------------------------------------
 # ancestors / masks
 # -----------------------------------------------------------------------------
 

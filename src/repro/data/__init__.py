@@ -1,8 +1,17 @@
 from repro.data.pipeline import (
     DataConfig,
     SyntheticLMDataset,
+    TraceRequest,
     make_request_stream,
+    make_request_trace,
     sharded_batches,
 )
 
-__all__ = ["DataConfig", "SyntheticLMDataset", "make_request_stream", "sharded_batches"]
+__all__ = [
+    "DataConfig",
+    "SyntheticLMDataset",
+    "TraceRequest",
+    "make_request_stream",
+    "make_request_trace",
+    "sharded_batches",
+]

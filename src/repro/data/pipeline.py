@@ -72,9 +72,60 @@ def sharded_batches(ds: SyntheticLMDataset, mesh, start_step: int = 0) -> Iterat
         step += 1
 
 
-def make_request_stream(vocab_size: int, prompt_len: int, batch: int, n_requests: int,
+def _draw_prompt_len(rng, prompt_len) -> int:
+    """int -> fixed; (lo, hi) -> uniform over 4-token buckets in [lo, hi].
+
+    Bucketing keeps the set of distinct prompt shapes small: the serving
+    runtime prefills each admitted request solo, and every distinct length is
+    one XLA compile of the prefill program."""
+    if isinstance(prompt_len, int):
+        return prompt_len
+    lo, hi = prompt_len
+    buckets = list(range(lo, hi + 1, 4)) or [lo]
+    return int(buckets[rng.integers(0, len(buckets))])
+
+
+def make_request_stream(vocab_size: int, prompt_len, batch: int, n_requests: int,
                         seed: int = 0) -> Iterator[np.ndarray]:
-    """Deterministic serving prompts [batch, prompt_len] int32."""
+    """Deterministic serving prompts [batch, P] int32.
+
+    ``prompt_len``: an int for fixed-shape prompts (the original behaviour),
+    or a (lo, hi) tuple for variable lengths drawn per request."""
     rng = np.random.default_rng(seed)
     for _ in range(n_requests):
-        yield rng.integers(0, vocab_size, size=(batch, prompt_len), dtype=np.int32)
+        P = _draw_prompt_len(rng, prompt_len)
+        yield rng.integers(0, vocab_size, size=(batch, P), dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One entry of a serving arrival trace."""
+
+    rid: int
+    arrival_s: float
+    prompt: np.ndarray  # i32[P]
+    max_new: int = 32
+
+
+def make_request_trace(vocab_size: int, n_requests: int, *, rate_rps: float = 2.0,
+                       prompt_len=(8, 24), max_new: int = 32,
+                       seed: int = 0) -> list[TraceRequest]:
+    """Seeded Poisson arrival trace with variable prompt lengths.
+
+    Inter-arrival gaps are exponential with mean ``1 / rate_rps`` (a Poisson
+    process at ``rate_rps`` requests/s), prompt lengths are drawn per request
+    (see ``_draw_prompt_len``); both deterministic given ``seed``.  This is
+    the realistic-traffic stimulus for the continuous-batching runtime:
+    bursts queue up, lulls drain slots."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be positive, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace = []
+    for i in range(n_requests):
+        if i > 0:
+            t += float(rng.exponential(1.0 / rate_rps))
+        P = _draw_prompt_len(rng, prompt_len)
+        prompt = rng.integers(0, vocab_size, size=(P,), dtype=np.int32)
+        trace.append(TraceRequest(rid=i, arrival_s=t, prompt=prompt, max_new=max_new))
+    return trace

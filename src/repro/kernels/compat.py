@@ -1,0 +1,10 @@
+"""jax-version compat for the Pallas kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` in newer jax;
+every kernel imports the alias from here so the next rename lands in one
+place.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

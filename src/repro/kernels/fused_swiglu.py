@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, wg_ref, wu_ref, o_ref, g_s, u_s):
     """Grid step (i, j, k): x tile [bm, bk] against wg/wu tiles [bk, bn]."""
@@ -62,7 +64,7 @@ def fused_swiglu_pallas(x, wg, wu, *, block_m: int, block_n: int, block_k: int, 
             pltpu.VMEM((block_m, block_n), jnp.float32),
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 NEG = -1e30
 
 
@@ -106,7 +108,7 @@ def tree_attention_pallas(q_r, k, v, mask, *, scale: float, block_k: int, interp
             pltpu.VMEM((gn, 128), jnp.float32),
             pltpu.VMEM((gn, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,11 +2,18 @@
 (the paper's system, end to end).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 3 --max-new 48
+  PYTHONPATH=src python -m repro.launch.serve --continuous --requests 8
 
 Runs the profile pass (paper §5.5: allocation split + expansion depth d),
 then serves a deterministic request stream through SpecEngine and reports
-decoding speed + compression ratio per request.  On this CPU container both
-device groups map to the same device (correctness only); on a real slice
+decoding speed + compression ratio per request.  ``--continuous`` replaces
+the one-batch-at-a-time replay with the continuous-batching runtime
+(repro.serving): a seeded Poisson arrival trace is served through per-slot
+request lifecycles — admissions backfill retiring slots mid-flight, per
+request telemetry (TTFT, tok/s, acceptance, overlapping round lifetimes) is
+printed, and each finished output is checked byte-identical against a solo
+``generate()`` run (--no-verify to skip).  On this CPU container both device
+groups map to the same device (correctness only); on a real slice
 ``--target-devices`` selects the disaggregated split.
 """
 
@@ -21,7 +28,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.engine import SpecConfig, SpecEngine
 from repro.core.scheduler import candidate_depths, profile_times
-from repro.data import make_request_stream
+from repro.data import make_request_stream, make_request_trace
 from repro.launch.mesh import make_serving_mesh
 from repro.models.api import make_model
 
@@ -46,6 +53,46 @@ def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="paralle
     return eng, tp, dp, cfgT
 
 
+def run_continuous(args, eng, tp, dp, cfgT) -> None:
+    """Continuous batching: serve a Poisson trace with per-slot lifecycles."""
+    from repro.serving import ContinuousBatchingRuntime, Request, RequestQueue, WallClock
+
+    trace = make_request_trace(
+        cfgT.vocab_size, args.requests, rate_rps=args.rate,
+        prompt_len=(max(4, args.prompt_len // 2), args.prompt_len),
+        max_new=args.max_new, seed=0,
+    )
+    rt = ContinuousBatchingRuntime(
+        eng, tp, dp, n_slots=args.slots,
+        queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
+    )
+    accepted = rt.submit_trace(
+        Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new)
+        for r in trace
+    )
+    print(f"continuous: {accepted}/{len(trace)} requests accepted "
+          f"({args.slots} slots, Poisson rate {args.rate}/s, queue cap {args.queue_cap})")
+    t0 = time.perf_counter()
+    results = rt.run()
+    wall = time.perf_counter() - t0
+    print(rt.stats.report())
+    total = sum(len(v) for v in results.values())
+    print(f"wall: {total} tokens in {wall:.1f}s ({total/wall:.1f} tok/s incl. compile); "
+          f"{rt.queue.rejected} shed by admission control")
+
+    if args.verify:
+        mismatches = 0
+        for r in trace:
+            if r.rid not in results:
+                continue
+            solo, _ = eng.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+            ok = results[r.rid] == solo[0]
+            mismatches += 0 if ok else 1
+            print(f"verify req {r.rid}: {'byte-identical to solo generate()' if ok else 'MISMATCH'}")
+        if mismatches:
+            raise SystemExit(f"{mismatches} request(s) diverged from solo generate()")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--target-arch", default="qwen2.5-14b")
@@ -59,6 +106,13 @@ def main(argv=None):
     ap.add_argument("--d", type=int, default=0, help="0 = profile-derived")
     ap.add_argument("--n-target", type=int, default=6)
     ap.add_argument("--n-draft", type=int, default=2)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a Poisson trace through the continuous-batching runtime")
+    ap.add_argument("--slots", type=int, default=2, help="continuous: engine batch slots")
+    ap.add_argument("--rate", type=float, default=2.0, help="continuous: Poisson arrival rate (req/s)")
+    ap.add_argument("--queue-cap", type=int, default=64, help="continuous: admission-control queue cap")
+    ap.add_argument("--no-verify", dest="verify", action="store_false",
+                    help="continuous: skip byte-identical check vs solo generate()")
     args = ap.parse_args(argv)
 
     eng, tp, dp, cfgT = build_engine(
@@ -76,6 +130,10 @@ def main(argv=None):
         eng.cfg = dataclasses.replace(eng.cfg, d=d_lo)
         print(f"profile: t_draft={prof.t_draft_s*1e3:.1f}ms t_target={prof.t_target_s*1e3:.1f}ms "
               f"-> d in {{{d_lo},{d_hi}}}, using d={d_lo}")
+
+    if args.continuous:
+        run_continuous(args, eng, tp, dp, cfgT)
+        return
 
     total_toks, total_s = 0, 0.0
     for i, prompt in enumerate(make_request_stream(cfgT.vocab_size, args.prompt_len, 1, args.requests)):

@@ -1,0 +1,61 @@
+"""repro.serving — continuous-batching serving runtime for the async
+speculative engine.
+
+The paper's headline number is an end-to-end *serving* result: the
+disaggregated draft/target pipeline only pays off when it is kept full.  This
+package turns the repo's one-shot ``SpecEngine.generate()`` into a request
+runtime that multiplexes many independent requests through one engine with
+per-slot lifecycles.
+
+Modules
+-------
+``queue``
+    ``Request`` and ``RequestQueue`` — FIFO with admission control: a hard
+    queue cap (load shedding) and arrival-time gating so a seeded Poisson
+    trace (``repro.data.make_request_trace``) replays like live traffic.
+``runtime``
+    ``ContinuousBatchingRuntime`` — the serving loop.  Admits requests into
+    free engine slots (solo prefill installed into that slot's KV rows +
+    per-slot tree re-seed), drives mixed-progress decode rounds through
+    ``SpecEngine.step``, streams each request's verified tokens as they land,
+    retires slots on EOS / max_new / cache budget, and immediately backfills
+    from the queue.  ``WallClock`` / ``VirtualClock`` make trace replay real
+    or deterministic.
+``stats``
+    ``ServerStats`` — per-request TTFT, decode tok/s, acceptance rate, slot
+    and round lifetimes (overlapping round intervals are the evidence of
+    continuous batching), plus per-round occupancy and queue-depth samples.
+
+Correctness contract: greedy verification makes every row's emitted stream
+equal target-only greedy decoding, independent of its neighbors — so each
+request's output is byte-identical to a solo ``generate()`` run regardless of
+when it was admitted or which slot it recycled (tests/test_serving.py).
+
+Quick start::
+
+    from repro.serving import ContinuousBatchingRuntime, Request
+
+    rt = ContinuousBatchingRuntime(engine, tparams, dparams, n_slots=4)
+    for i, prompt in enumerate(prompts):
+        rt.submit(Request(rid=i, prompt=prompt, max_new=64))
+    outputs = rt.run()          # {rid: [tokens]}
+    print(rt.stats.report())    # TTFT / tok-s / occupancy / acceptance
+
+See also ``examples/continuous_serving.py`` and
+``python -m repro.launch.serve --continuous``.
+"""
+
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.runtime import ContinuousBatchingRuntime, VirtualClock, WallClock
+from repro.serving.stats import RequestRecord, ServerStats, percentile
+
+__all__ = [
+    "ContinuousBatchingRuntime",
+    "Request",
+    "RequestQueue",
+    "RequestRecord",
+    "ServerStats",
+    "VirtualClock",
+    "WallClock",
+    "percentile",
+]

@@ -1,0 +1,88 @@
+"""Request queue with admission control for the continuous-batching runtime.
+
+FIFO in arrival order, with two admission gates:
+  * a hard queue cap (``cap``): submissions beyond it are rejected at the
+    door (counted in ``rejected``) instead of growing an unbounded backlog —
+    the load-shedding half of admission control;
+  * arrival-time gating: a request only becomes poppable once the serving
+    clock has reached its ``arrival_s`` (replaying a recorded/Poisson trace
+    behaves like live traffic).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt plus per-request decode limits."""
+
+    rid: int
+    prompt: np.ndarray  # i32[P]
+    arrival_s: float = 0.0
+    max_new: int | None = None  # None: inherit the engine's max_new
+    eos_id: int | None = None  # None: inherit the engine's eos_id; -1: never stop
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new is not None and self.max_new <= 0:
+            raise ValueError(f"request {self.rid}: max_new must be positive")
+
+
+class RequestQueue:
+    def __init__(self, cap: int = 64):
+        self.cap = cap
+        self._q: collections.deque[Request] = collections.deque()
+        self.submitted = 0
+        self.rejected = 0
+        self._last_arrival = float("-inf")
+
+    def reject(self, req: Request) -> bool:
+        """Count a request rejected by an external admission gate (e.g. the
+        runtime's prompt-length check), keeping all accounting in one place."""
+        self.submitted += 1
+        self.rejected += 1
+        return False
+
+    def submit(self, req: Request) -> bool:
+        """Admission control: returns False (and counts the shed) on a full
+        queue.  Submissions must come in arrival order (trace replay); an
+        out-of-order submission raises without touching the counters, so
+        ``submitted == queued + rejected`` always holds."""
+        if req.arrival_s < self._last_arrival:
+            raise ValueError("submissions must be ordered by arrival_s")
+        self.submitted += 1
+        if len(self._q) >= self.cap:
+            self.rejected += 1
+            return False
+        self._last_arrival = req.arrival_s
+        self._q.append(req)
+        return True
+
+    def pop_ready(self, now: float) -> Request | None:
+        """Next request whose arrival time has passed, or None."""
+        if self._q and self._q[0].arrival_s <= now:
+            return self._q.popleft()
+        return None
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the head request (None when empty)."""
+        return self._q[0].arrival_s if self._q else None
+
+    def depth(self, now: float) -> int:
+        """Requests that have arrived and are waiting for a slot."""
+        return sum(1 for r in self._q if r.arrival_s <= now)
+
+    @property
+    def pending(self) -> int:
+        """All waiting requests, including not-yet-arrived trace entries."""
+        return len(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)

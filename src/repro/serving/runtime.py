@@ -1,0 +1,224 @@
+"""ContinuousBatchingRuntime — multiplex many independent requests through
+one SpecEngine with per-slot lifecycles.
+
+The engine's jitted round (``SpecEngine.step``) always advances all B batch
+rows; this runtime gives each row (a *slot*) its own request lifecycle:
+
+  admit   — pop an arrived request from the queue into a free slot
+            (solo prefill installed into the slot's cache rows, per-slot
+            tree re-seed) — neighbors keep decoding untouched;
+  decode  — mixed-progress rounds: every occupied slot emits its verified
+            tokens each round, streamed to the caller as they land;
+  retire  — on EOS / max_new / cache budget the slot is released (tree
+            parked, KV rows zeroed) and immediately backfilled from the
+            queue on the next loop turn.
+
+Because greedy verification makes each row's emitted stream equal target-only
+greedy decoding regardless of what the other rows are doing, a request's
+output is byte-identical to a solo ``generate()`` run no matter when it was
+admitted (tests/test_serving.py asserts this).
+
+The clock is injectable: ``WallClock`` replays a trace against real time
+(sleeping until the next arrival when idle); ``VirtualClock`` advances a
+deterministic amount per engine round, so tests and benchmarks get
+reproducible admission schedules independent of host speed.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core.engine import absorb_emitted
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.stats import ServerStats
+
+
+class WallClock:
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def reset(self) -> None:
+        """Re-zero the serving timeline (run() calls this so construction-time
+        jit compiles don't consume the trace's arrival schedule)."""
+        self._t0 = time.perf_counter()
+
+    def on_round(self) -> None:  # real time advances by itself
+        pass
+
+    def wait_until(self, t: float) -> None:
+        d = t - self.now()
+        if d > 0:
+            time.sleep(d)
+
+
+class VirtualClock:
+    """Deterministic clock: ``round_dt`` virtual seconds per engine round."""
+
+    def __init__(self, round_dt: float = 1.0):
+        self._t = 0.0
+        self.round_dt = round_dt
+
+    def now(self) -> float:
+        return self._t
+
+    def reset(self) -> None:
+        self._t = 0.0
+
+    def on_round(self) -> None:
+        self._t += self.round_dt
+
+    def wait_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+@dataclasses.dataclass
+class _Active:
+    """Host-side bookkeeping for one occupied slot."""
+
+    req: Request
+    plen: int  # host mirror of the slot's device prefix length
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    truncated: bool = False
+
+
+class ContinuousBatchingRuntime:
+    """Drives one SpecEngine state of ``n_slots`` batch rows over a request
+    queue.  ``stream(rid, new_tokens, done)`` is called once per round per
+    occupied slot with that round's freshly verified tokens."""
+
+    def __init__(self, engine, tparams, dparams, n_slots: int, *,
+                 queue: RequestQueue | None = None,
+                 clock=None,
+                 stats: ServerStats | None = None,
+                 stream: Callable[[int, list, bool], None] | None = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.engine, self.tparams, self.dparams = engine, tparams, dparams
+        self.n_slots = n_slots
+        self.queue = queue if queue is not None else RequestQueue()
+        self.clock = clock if clock is not None else WallClock()
+        self.stats = stats if stats is not None else ServerStats()
+        self.stream = stream
+        self.state = engine.init_state(n_slots)
+        self.slots: list[_Active | None] = [None] * n_slots
+        self.results: dict[int, list] = {}
+        # trace entries whose arrival time is still in the future; they join
+        # the queue when the clock reaches them, so the queue cap sheds on
+        # ARRIVED backlog (live-traffic semantics), not on trace length
+        self._pending: collections.deque[Request] = collections.deque()
+        self._started = False  # pre-run submissions gate against t=0
+        # verify rows reach plen-1+bs and the re-rooted tree needs headroom:
+        # same safety margin generate() uses before its budget break
+        self._plen_limit = min(engine.S_max_t, engine.S_max_d) - 2 * engine.cfg.bs
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Rejected (False) when the prompt cannot fit the
+        engine's cache budget, or — for already-arrived requests — when the
+        queue is full.  A request with a future ``arrival_s`` is held outside
+        the queue and faces the cap when its arrival time comes."""
+        if req.prompt.size >= self._plen_limit:
+            return self.queue.reject(req)
+        # before run() the serving timeline hasn't started: arrivals compare
+        # against t=0, not against however long engine construction took
+        now = self.clock.now() if self._started else 0.0
+        if req.arrival_s > now:
+            if self._pending and req.arrival_s < self._pending[-1].arrival_s:
+                raise ValueError("submissions must be ordered by arrival_s")
+            self._pending.append(req)
+            return True
+        # already arrived (e.g. a live submit after a trace was served): it
+        # arrives NOW on the serving timeline, keeping queue ordering intact
+        # (a copy, so the caller's Request is not mutated)
+        return self.queue.submit(dataclasses.replace(req, arrival_s=max(req.arrival_s, now)))
+
+    def _feed_arrived(self) -> None:
+        """Move trace entries whose arrival time has passed into the queue
+        (where the cap may shed them)."""
+        now = self.clock.now()
+        while self._pending and self._pending[0].arrival_s <= now:
+            self.queue.submit(self._pending.popleft())
+
+    def submit_trace(self, requests) -> int:
+        """Submit an iterable of Requests (arrival-ordered); returns #accepted."""
+        return sum(1 for r in requests if self.submit(r))
+
+    # ------------------------------------------------------------------
+    @property
+    def occupied(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def _admit_ready(self) -> None:
+        """Backfill every free slot with an arrived request (FIFO)."""
+        now = self.clock.now()
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None:
+                continue
+            req = self.queue.pop_ready(now)
+            if req is None:
+                return
+            self.state = self.engine.admit_slot(
+                self.tparams, self.dparams, self.state, slot, req.prompt)
+            self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
+            self.stats.on_admit(req.rid, slot, req.arrival_s, self.clock.now())
+
+    def _retire(self, slot: int, act: _Active) -> None:
+        self.results[act.req.rid] = act.out
+        self.state = self.engine.release_slot(self.state, slot)
+        self.slots[slot] = None
+        self.stats.on_finish(act.req.rid, self.clock.now(), truncated=act.truncated)
+
+    def _absorb(self, slot: int, act: _Active, res) -> None:
+        """Fold one StepResult row into the slot's request: append verified
+        tokens up to EOS/max_new, stream them, update the plen mirror."""
+        # per-request eos/max_new fall back to the engine's, so the
+        # byte-identical contract vs solo generate() holds for any SpecConfig
+        eos = act.req.eos_id if act.req.eos_id is not None else self.engine.cfg.eos_id
+        max_new = act.req.max_new if act.req.max_new is not None else self.engine.cfg.max_new
+        new, act.done = absorb_emitted(
+            act.out, res.emitted[slot], res.n_emitted[slot], max_new, eos)
+        act.plen += int(res.n_emitted[slot])
+        if act.plen >= self._plen_limit and not act.done:  # cache budget
+            act.done = act.truncated = True
+        self.stats.on_tokens(act.req.rid, len(new), int(res.n_accepted[slot]),
+                             self.clock.now())
+        if self.stream is not None and (new or act.done):
+            self.stream(act.req.rid, new, act.done)
+
+    def run(self) -> dict[int, list]:
+        """Serve until the queue drains and every slot retires.  Returns
+        {rid: emitted tokens}; telemetry accumulates in ``self.stats``."""
+        if not self._started:
+            self._started = True
+            self.clock.reset()  # the trace timeline starts now
+            self.stats.started_s = self.clock.now()  # later runs keep the
+            # original start so summary() throughput spans all serving
+        while self._pending or self.queue.pending or self.occupied:
+            self._feed_arrived()
+            self._admit_ready()
+            if not self.occupied:
+                nxt = self.queue.next_arrival()
+                if nxt is None and self._pending:
+                    nxt = self._pending[0].arrival_s
+                if nxt is None:
+                    break
+                self.clock.wait_until(nxt)  # idle: jump to the next arrival
+                continue
+            self.state, res = self.engine.step(self.tparams, self.dparams, self.state)
+            self.clock.on_round()
+            self.stats.on_round(self.occupied, self.queue.depth(self.clock.now()))
+            for slot, act in enumerate(self.slots):
+                if act is None:
+                    continue
+                self._absorb(slot, act, res)
+                if act.done:
+                    self._retire(slot, act)
+        self.stats.finished_s = self.clock.now()
+        return self.results

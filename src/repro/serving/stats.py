@@ -1,0 +1,140 @@
+"""ServerStats — telemetry for the continuous-batching runtime.
+
+Per-request records (TTFT, decode tok/s, acceptance rate, slot + round
+lifetime) plus per-round engine samples (slot occupancy, queue depth).  The
+round-interval columns in ``report()`` are the direct evidence of continuous
+batching: requests admitted mid-flight show overlapping [admit, finish)
+round ranges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    slot: int = -1
+    arrival_s: float = 0.0
+    admitted_s: float = 0.0
+    first_token_s: float | None = None
+    finish_s: float | None = None
+    admit_round: int = -1
+    finish_round: int = -1
+    n_tokens: int = 0
+    n_rounds: int = 0
+    n_accepted: int = 0
+    truncated: bool = False  # cut off by the KV budget, not EOS/max_new
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Time to first token, measured from arrival (includes queueing)."""
+        return None if self.first_token_s is None else self.first_token_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def tok_per_s(self) -> float | None:
+        """Decode throughput from admission to finish (excludes queueing)."""
+        if self.finish_s is None or self.finish_s <= self.admitted_s:
+            return None
+        return self.n_tokens / (self.finish_s - self.admitted_s)
+
+    @property
+    def acceptance(self) -> float:
+        """Accepted draft tokens per verification round."""
+        return self.n_accepted / max(self.n_rounds, 1)
+
+    @property
+    def compression_ratio(self) -> float:
+        """Emitted tokens per target inference (the paper's metric)."""
+        return self.n_tokens / max(self.n_rounds, 1)
+
+
+def percentile(xs, p: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else float("nan")
+
+
+class ServerStats:
+    def __init__(self):
+        self.records: dict[int, RequestRecord] = {}
+        self.rounds = 0
+        self.occupancy_samples: list[int] = []
+        self.queue_depth_samples: list[int] = []
+        self.started_s: float = 0.0
+        self.finished_s: float = 0.0
+
+    # ---- runtime hooks ---------------------------------------------------
+    def on_admit(self, rid: int, slot: int, arrival_s: float, now: float) -> None:
+        self.records[rid] = RequestRecord(
+            rid=rid, slot=slot, arrival_s=arrival_s, admitted_s=now,
+            admit_round=self.rounds,
+        )
+
+    def on_round(self, occupied: int, queue_depth: int) -> None:
+        self.rounds += 1
+        self.occupancy_samples.append(occupied)
+        self.queue_depth_samples.append(queue_depth)
+
+    def on_tokens(self, rid: int, n_new: int, n_accepted: int, now: float) -> None:
+        r = self.records[rid]
+        r.n_rounds += 1
+        r.n_accepted += n_accepted
+        if n_new > 0:
+            if r.first_token_s is None:
+                r.first_token_s = now
+            r.n_tokens += n_new
+
+    def on_finish(self, rid: int, now: float, truncated: bool = False) -> None:
+        r = self.records[rid]
+        r.finish_s = now
+        r.finish_round = self.rounds
+        r.truncated = truncated
+
+    # ---- aggregates ------------------------------------------------------
+    def finished_records(self) -> list[RequestRecord]:
+        return [r for r in self.records.values() if r.finish_s is not None]
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancy_samples)) if self.occupancy_samples else 0.0
+
+    def summary(self) -> dict:
+        recs = self.finished_records()
+        ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
+        total_tokens = sum(r.n_tokens for r in recs)
+        wall = max(self.finished_s - self.started_s, 1e-9)
+        return {
+            "n_finished": len(recs),
+            "total_tokens": total_tokens,
+            "throughput_tok_s": total_tokens / wall,
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "mean_occupancy": self.mean_occupancy,
+            "mean_acceptance": float(np.mean([r.acceptance for r in recs])) if recs else 0.0,
+            "rounds": self.rounds,
+        }
+
+    def report(self) -> str:
+        lines = ["rid slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok"]
+        for r in sorted(self.records.values(), key=lambda r: r.rid):
+            ttft = f"{r.ttft_s:7.3f}" if r.ttft_s is not None else "      -"
+            tps = f"{r.tok_per_s:6.1f}" if r.tok_per_s is not None else "     -"
+            lines.append(
+                f"{r.rid:3d} {r.slot:4d} {r.arrival_s:7.3f} {r.admitted_s:6.3f} "
+                f"   [{r.admit_round:4d},{r.finish_round:4d})  {ttft} {tps} "
+                f"{r.acceptance:7.2f} {r.n_tokens:5d}"
+                + ("  TRUNCATED(kv-budget)" if r.truncated else "")
+            )
+        s = self.summary()
+        lines.append(
+            f"aggregate: {s['n_finished']} finished, {s['throughput_tok_s']:.1f} tok/s, "
+            f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
+            f"occupancy {s['mean_occupancy']:.2f}, acceptance {s['mean_acceptance']:.2f}"
+        )
+        return "\n".join(lines)

@@ -1,5 +1,6 @@
 from .rules import (
     Param,
+    shard_map,
     DEFAULT_RULES,
     axes_of,
     add_leading_axis,
@@ -14,6 +15,7 @@ from .rules import (
 
 __all__ = [
     "Param",
+    "shard_map",
     "DEFAULT_RULES",
     "axes_of",
     "add_leading_axis",

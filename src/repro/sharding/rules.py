@@ -24,6 +24,26 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax-version compat: shard_map graduated from jax.experimental to
+# jax.shard_map, and its replication-check kwarg was renamed
+# check_rep -> check_vma along the way.  All repo code calls
+# repro.sharding.shard_map with the NEW spelling; this shim routes to
+# whatever the installed jax provides.
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(_inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map_impl(f, *args, **kwargs)
+
 # -----------------------------------------------------------------------------
 # Param: an array boxed with its logical axis names (single source of truth).
 # -----------------------------------------------------------------------------

@@ -1,0 +1,107 @@
+"""Deterministic micro-subset of ``hypothesis``, installed by conftest.py when
+the real package is absent (it is an optional test dep, pinned in
+requirements-test.txt).
+
+Only the surface the test suite actually uses is provided: ``given``,
+``settings``, and the strategies ``integers``, ``booleans``, ``floats``,
+``sampled_from``, ``lists``, ``data``.  Example generation is seeded purely by
+the example index, so a failing example reproduces exactly across runs — the
+property the suite relies on hypothesis for.  Shrinking, the example database,
+and stateful testing are intentionally out of scope.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = min_size + 8 if max_size is None else max_size
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+class _Data:
+    """Interactive draws (``st.data()``): share the example's rng stream."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+def _data():
+    return _Strategy(lambda rng: _Data(rng))
+
+
+def settings(max_examples=50, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 20))
+            for ex in range(n):
+                rng = np.random.default_rng([_SEED, ex])
+                vals = [s.draw(rng) for s in strategies]
+                fn(*args, *vals, **kwargs)
+
+        # like hypothesis, strategies fill the trailing parameters; only the
+        # leading ones (pytest fixtures) stay visible to the test collector
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        runner.__signature__ = sig.replace(parameters=params[: len(params) - len(strategies)])
+        del runner.__wrapped__  # keep inspect off the original signature
+        runner.is_hypothesis_test = True
+        return runner
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.booleans = _booleans
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.data = _data

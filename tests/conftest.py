@@ -6,6 +6,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # hypothesis is an optional test dep (requirements-test.txt); without it
+    import hypothesis  # noqa: F401
+except ImportError:  # the property tests fall back to a deterministic stub
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback as _hyp
+
+    sys.modules.setdefault("hypothesis", _hyp)
+    sys.modules.setdefault("hypothesis.strategies", _hyp.strategies)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
