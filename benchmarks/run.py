@@ -33,7 +33,7 @@ BENCHES = {
     "fig8": ("Paper Figure 8 — ablation (parallel x kernels)", ablation.run),
     "table7": ("Paper Tables 3/7 — kernel micro-benchmarks", kernel_micro.run),
     "fig9": ("Paper Figure 9 — draft/target allocation sweep", allocation.run),
-    "serving": ("Serving — continuous-batching offered-throughput sweep", serving.run),
+    "serving": ("Serving — replicas x offered-load sweep (sharded runtime)", serving.run),
 }
 
 

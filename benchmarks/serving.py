@@ -1,12 +1,21 @@
-"""Serving benchmark — offered-throughput sweep over the continuous-batching
-runtime (regime: measured engine dynamics on CPU smoke models; absolute
-tok/s is container-bound, the *shape* — TTFT growth and occupancy saturation
-as offered load approaches capacity — is the result).
+"""Serving benchmark — replicas x offered-load sweep over the sharded
+continuous-batching runtime (regime: measured engine dynamics on CPU smoke
+models; absolute wall tok/s is container-bound, the *shape* is the result:
+TTFT growth and occupancy saturation as offered load approaches one
+replica's capacity, and the sustained-throughput headroom a second replica
+adds at saturating load).
 
-For each offered Poisson rate, a seeded trace is replayed on a VirtualClock
-(deterministic admission schedule, immune to CPU compile noise) while
-wall-clock throughput is measured separately.  CSV: rate, finished, tok/s,
-TTFT p50/p99 (virtual s), mean occupancy, mean acceptance, queue shed.
+For each (replica count, offered Poisson rate) cell, a seeded trace is
+replayed on a VirtualClock (deterministic admission schedule, immune to CPU
+compile noise) while wall-clock throughput is measured separately.  One
+global round of the sharded loop advances the virtual clock once while
+every busy replica steps — replica rounds run concurrently on disjoint
+device groups in a real deployment — so ``sustained_tok_s`` (tokens per
+virtual second over the serving window) is the scaling signal: at a rate
+that saturates one replica, two replicas drain the same trace in fewer
+global rounds.  CSV: replicas, rate, finished, sustained tok/s (virtual),
+wall tok/s, TTFT p50/p99 (virtual s), per-replica mean occupancy, queue
+shed.
 """
 
 from __future__ import annotations
@@ -21,11 +30,12 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import SpecConfig, SpecEngine
 from repro.data import make_request_trace
 from repro.models.api import make_model
-from repro.serving import ContinuousBatchingRuntime, Request, RequestQueue, VirtualClock
+from repro.serving import Request, RequestQueue, ShardedServingRuntime, VirtualClock
 
+REPLICAS = (1, 2)
 RATES = (0.2, 1.0, 4.0)  # offered load, requests per virtual second
-N_REQUESTS = 8
-N_SLOTS = 2
+N_REQUESTS = 10
+N_SLOTS = 2  # per replica
 MAX_NEW = 16
 
 
@@ -45,12 +55,12 @@ def _build():
 
 def _warmup(eng, tp, dp, cfgT) -> None:
     """Pay every one-time XLA compile outside the timed sweeps so the first
-    offered rate's tok/s column is comparable to the rest.  Each distinct
+    cell's wall tok/s column is comparable to the rest.  Each distinct
     prompt length is one prefill compile, so cover every 4-token bucket the
     sweep's prompt_len=(8, 16) range can draw."""
     rng = np.random.default_rng(3)
-    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=N_SLOTS,
-                                   clock=VirtualClock(round_dt=0.1))
+    rt = ShardedServingRuntime([eng], tp, dp, n_slots=N_SLOTS,
+                               clock=VirtualClock(round_dt=0.1))
     for i, P in enumerate(range(8, 17, 4)):
         prompt = rng.integers(0, cfgT.vocab_size, size=(P,), dtype=np.int32)
         rt.submit(Request(rid=i, prompt=prompt, arrival_s=0.0, max_new=4))
@@ -62,36 +72,47 @@ def run() -> None:
     _warmup(eng, tp, dp, cfgT)
     rows = []
     peak_occ = []
-    for rate in RATES:
-        trace = make_request_trace(cfgT.vocab_size, N_REQUESTS, rate_rps=rate,
-                                   prompt_len=(8, 16), max_new=MAX_NEW, seed=7)
-        rt = ContinuousBatchingRuntime(
-            eng, tp, dp, n_slots=N_SLOTS,
-            queue=RequestQueue(cap=2 * N_REQUESTS),
-            clock=VirtualClock(round_dt=0.1),  # 10 rounds / virtual second
-        )
-        rt.submit_trace(Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s,
-                                max_new=r.max_new) for r in trace)
-        t0 = time.perf_counter()
-        results = rt.run()
-        wall = time.perf_counter() - t0
-        s = rt.stats.summary()
-        total = sum(len(v) for v in results.values())
-        rows.append([rate, s["n_finished"], round(total / wall, 2),
-                     round(s["ttft_p50_s"], 3), round(s["ttft_p99_s"], 3),
-                     round(s["mean_occupancy"], 3), round(s["mean_acceptance"], 3),
-                     rt.queue.rejected])
-        print(f"  rate={rate:5.1f}/s finished={s['n_finished']} tok/s={total/wall:7.1f} "
-              f"ttft p50={s['ttft_p50_s']:.3f} p99={s['ttft_p99_s']:.3f} "
-              f"occ={s['mean_occupancy']:.2f} acc={s['mean_acceptance']:.2f}")
-        peak_occ.append(max(rt.stats.occupancy_samples))
+    sustained = {}  # (replicas, rate) -> virtual tok/s
+    for n_rep in REPLICAS:
+        for rate in RATES:
+            trace = make_request_trace(cfgT.vocab_size, N_REQUESTS, rate_rps=rate,
+                                       prompt_len=(8, 16), max_new=MAX_NEW, seed=7)
+            # the same engine object serves every replica on this one-device
+            # container: states are per-replica, the jit cache is shared
+            rt = ShardedServingRuntime(
+                [eng] * n_rep, tp, dp, n_slots=N_SLOTS,
+                queue=RequestQueue(cap=2 * N_REQUESTS),
+                clock=VirtualClock(round_dt=0.1),  # 10 global rounds / virtual s
+            )
+            rt.submit_trace(Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s,
+                                    max_new=r.max_new) for r in trace)
+            t0 = time.perf_counter()
+            results = rt.run()
+            wall = time.perf_counter() - t0
+            s = rt.summary()
+            total = sum(len(v) for v in results.values())
+            sustained[(n_rep, rate)] = s["throughput_tok_s"]
+            occ = "|".join(f"{o:.2f}" for o in s["per_replica_occupancy"])
+            rows.append([n_rep, rate, s["n_finished"],
+                         round(s["throughput_tok_s"], 2), round(total / wall, 2),
+                         round(s["ttft_p50_s"], 3), round(s["ttft_p99_s"], 3),
+                         occ, rt.queue.rejected])
+            print(f"  replicas={n_rep} rate={rate:5.1f}/s finished={s['n_finished']} "
+                  f"sustained={s['throughput_tok_s']:6.1f} tok/vs wall={total/wall:7.1f} tok/s "
+                  f"ttft p50={s['ttft_p50_s']:.3f} p99={s['ttft_p99_s']:.3f} occ={occ}")
+            peak_occ.extend(max(st.occupancy_samples) for st in rt.stats
+                            if st.occupancy_samples)
     path = write_csv("serving.csv",
-                     ["offered_rate_rps", "finished", "tok_per_s", "ttft_p50_s",
-                      "ttft_p99_s", "mean_occupancy", "mean_acceptance", "shed"],
+                     ["replicas", "offered_rate_rps", "finished", "sustained_tok_s",
+                      "wall_tok_s", "ttft_p50_s", "ttft_p99_s",
+                      "occupancy_per_replica", "shed"],
                      rows)
     print(f"  -> {path}")
-    # saturation sanity AFTER the CSV lands, so a violation can't discard data
+    # sanity AFTER the CSV lands, so a violation can't discard data
     assert all(p <= N_SLOTS for p in peak_occ), peak_occ
+    sat = max(RATES)  # saturating load: the sharding payoff must show
+    assert sustained[(2, sat)] > sustained[(1, sat)], (
+        f"2 replicas did not out-serve 1 at rate {sat}: {sustained}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,65 @@
+"""Sharded serving demo: one queue, two engine replicas (tiny models, CPU).
+
+  PYTHONPATH=src python examples/sharded_serving.py
+
+Submits a seeded Poisson burst of 8 requests to a ShardedServingRuntime with
+2 replicas x 2 slots.  Watch the routing: each popped request lands on the
+least-loaded replica (FIFO tie-break), both replicas decode concurrently
+(one global round = every busy replica steps once), and the fleet report
+shows per-replica occupancy under one set of global TTFT/throughput numbers.
+On this CPU host both replicas share the device (and the engine's jit
+cache); on a real slice each replica owns a disjoint (target, draft) device
+pair from ``make_serving_mesh(..., replicas=2)``.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecConfig, SpecEngine
+from repro.data import make_request_trace
+from repro.models.api import make_model
+from repro.serving import Request, ShardedServingRuntime, VirtualClock
+
+cfgT = ModelConfig(name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                   d_ff=128, vocab_size=128)
+cfgD = ModelConfig(name="d", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=128)
+T, D = make_model(cfgT), make_model(cfgD)
+tp, dp = T.init(jax.random.PRNGKey(0)), D.init(jax.random.PRNGKey(1))
+tp["lm_head"].value = tp["lm_head"].value * 4.0  # peaked greedy chains
+dp["lm_head"].value = dp["lm_head"].value * 4.0
+
+engine = SpecEngine(T, D, SpecConfig(bs=8, w=4, c=2, d=2, max_new=24),
+                    S_max_t=256, S_max_d=256)
+
+trace = make_request_trace(cfgT.vocab_size, 8, rate_rps=2.0, prompt_len=(8, 16),
+                           max_new=16, seed=42)
+
+# the same engine object twice: states are per-replica, jit cache shared
+# (on a multi-device slice, build one engine per disjoint mesh pair instead)
+runtime = ShardedServingRuntime(
+    [engine, engine], tp, dp, n_slots=2,
+    clock=VirtualClock(round_dt=0.25),  # deterministic replay: 4 rounds/virtual s
+)
+runtime.submit_trace(
+    Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new)
+    for r in trace
+)
+results = runtime.run()
+
+print(runtime.report())
+print()
+
+# sharding changed the schedule, never the tokens
+for r in trace:
+    solo, _ = engine.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+    assert results[r.rid] == solo[0]
+used = sorted({runtime.replica_of(r.rid) for r in trace})
+print(f"all {len(results)} outputs byte-identical to solo generate(); "
+      f"replicas used: {used}")

@@ -212,6 +212,18 @@ class SpecEngine:
         c = self.cfg
         return max(1, -(-(c.bs) // (c.w * c.c)))
 
+    @property
+    def plen_budget(self) -> int:
+        """Largest per-row prefix length the caches can safely carry into one
+        more round: verify rows reach plen-1+bs and the re-rooted tree needs
+        another bs of headroom, so stop ``2*bs`` short of the tighter cache.
+
+        The single definition of the KV-budget bound, shared by ``generate()``
+        and the serving runtimes — if the two ever drift, a request near the
+        budget stops at different tokens solo vs served, silently breaking the
+        byte-identical contract."""
+        return min(self.S_max_t, self.S_max_d) - 2 * self.cfg.bs
+
     def init_state(self, B: int) -> EngineState:
         """Empty B-slot serving state: zero caches, parked (invalid) trees.
 
@@ -341,7 +353,7 @@ class SpecEngine:
 
         for _ in range(rounds_cap):
             longest = 0 if stats.emitted_rows is None else int(stats.emitted_rows.max())
-            if done.all() or (P + longest + 2 * c.bs) >= min(self.S_max_t, self.S_max_d):
+            if done.all() or (P + longest) >= self.plen_budget:
                 break
             state, res = self.step(tparams, dparams, state, stats=stats)
             for b in range(B):

@@ -20,20 +20,50 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_serving_mesh(n_target: int, n_draft: int):
+def make_serving_mesh(n_target: int, n_draft: int, *, replicas: int = 1):
     """Disaggregated serving: disjoint (target, draft) TP submeshes
-    (paper §3.1 GPU allocation).  Falls back to one shared device on the
-    CPU container (correctness-only)."""
+    (paper §3.1 GPU allocation), optionally carved ``replicas`` times for
+    sharded serving — replica i owns devices
+    ``[i*(n_target+n_draft), (i+1)*(n_target+n_draft))``, split target-first,
+    so no device is shared across replicas or across the draft/target roles.
+
+    Returns one ``(target_mesh, draft_mesh)`` pair for ``replicas == 1``
+    (the historical signature) or a list of ``replicas`` pairs otherwise.
+    On hosts with fewer than ``n_target + n_draft`` devices, EVERY pair
+    falls back to one shared device (the CPU container — correctness-only).
+    A partial fit — enough devices for some replicas but not all — raises
+    instead of silently overlapping later replicas onto device 0, which
+    would defeat the sharding it claims to provide.
+    """
     from jax.sharding import Mesh
     import numpy as np
 
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
     devs = jax.devices()
-    if len(devs) < n_target + n_draft:
-        m = Mesh(np.array(devs[:1]), ("model",))
-        return m, m
-    tgt = Mesh(np.array(devs[:n_target]), ("model",))
-    drf = Mesh(np.array(devs[n_target : n_target + n_draft]), ("model",))
-    return tgt, drf
+    group = n_target + n_draft
+
+    if len(devs) < group:  # all-or-nothing fallback: shared single device
+        def shared():
+            m = Mesh(np.array(devs[:1]), ("model",))
+            return m, m
+
+        return shared() if replicas == 1 else [shared() for _ in range(replicas)]
+    if len(devs) < group * replicas:
+        raise ValueError(
+            f"{len(devs)} devices cannot host {replicas} disjoint replicas of "
+            f"{group} devices ({n_target} target + {n_draft} draft) — lower "
+            f"the replica count or the per-replica device split")
+
+    def carve(i: int):
+        base = i * group
+        tgt = Mesh(np.array(devs[base : base + n_target]), ("model",))
+        drf = Mesh(np.array(devs[base + n_target : base + group]), ("model",))
+        return tgt, drf
+
+    if replicas == 1:
+        return carve(0)
+    return [carve(i) for i in range(replicas)]
 
 
 def host_device_mesh(model: int = 1, data: int = 1):

@@ -3,6 +3,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --requests 3 --max-new 48
   PYTHONPATH=src python -m repro.launch.serve --continuous --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --continuous --replicas 2
 
 Runs the profile pass (paper §5.5: allocation split + expansion depth d),
 then serves a deterministic request stream through SpecEngine and reports
@@ -12,9 +13,12 @@ the one-batch-at-a-time replay with the continuous-batching runtime
 request lifecycles — admissions backfill retiring slots mid-flight, per
 request telemetry (TTFT, tok/s, acceptance, overlapping round lifetimes) is
 printed, and each finished output is checked byte-identical against a solo
-``generate()`` run (--no-verify to skip).  On this CPU container both device
-groups map to the same device (correctness only); on a real slice
-``--target-devices`` selects the disaggregated split.
+``generate()`` run (--no-verify to skip).  ``--replicas N`` shards the
+continuous runtime over N SpecEngine replicas on disjoint device groups
+(one global queue, least-loaded routing, per-replica + fleet telemetry).
+On this CPU container all device groups map to the same device (correctness
+only); on a real slice ``--n-target``/``--n-draft`` select the disaggregated
+split carved once per replica.
 """
 
 from __future__ import annotations
@@ -35,7 +39,13 @@ from repro.models.api import make_model
 
 def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="parallel",
                  bs=8, w=4, c=2, d=2, max_new=48, S_max=512, n_target=6, n_draft=2,
-                 peaked=True):
+                 peaked=True, replicas=1):
+    """Build the serving engine(s).  With ``replicas > 1`` the device slice is
+    carved into that many disjoint (target, draft) mesh pairs and one
+    SpecEngine is built per pair; replicas whose mesh pair falls back to the
+    same devices as replica 0 (the CPU container) REUSE replica 0's engine
+    object — states are per-replica anyway, and sharing skips N-1 recompiles.
+    Returns (engine | [engines], tparams, dparams, cfgT)."""
     cfgT = get_config(target_arch, smoke=smoke)
     cfgD = get_config(draft_arch, smoke=smoke)
     assert cfgT.vocab_size == cfgD.vocab_size, "draft/target must share a vocab"
@@ -47,48 +57,75 @@ def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="paralle
         # chains are peaked enough for realistic acceptance behaviour
         tp["lm_head"].value = tp["lm_head"].value * 4.0
         dp["lm_head"].value = dp["lm_head"].value * 4.0
-    mesh_t, mesh_d = make_serving_mesh(n_target, n_draft)
-    eng = SpecEngine(T, D, SpecConfig(bs=bs, w=w, c=c, d=d, mode=mode, max_new=max_new),
-                     S_max_t=S_max, S_max_d=S_max, mesh_target=mesh_t, mesh_draft=mesh_d)
-    return eng, tp, dp, cfgT
+    cfg = SpecConfig(bs=bs, w=w, c=c, d=d, mode=mode, max_new=max_new)
+
+    def mk(mesh_t, mesh_d):
+        return SpecEngine(T, D, cfg, S_max_t=S_max, S_max_d=S_max,
+                          mesh_target=mesh_t, mesh_draft=mesh_d)
+
+    if replicas == 1:
+        mesh_t, mesh_d = make_serving_mesh(n_target, n_draft)
+        return mk(mesh_t, mesh_d), tp, dp, cfgT
+    pairs = make_serving_mesh(n_target, n_draft, replicas=replicas)
+    engines = [mk(*pairs[0])]
+    for mt, md in pairs[1:]:
+        same = (tuple(mt.devices.flat) == tuple(pairs[0][0].devices.flat)
+                and tuple(md.devices.flat) == tuple(pairs[0][1].devices.flat))
+        engines.append(engines[0] if same else mk(mt, md))
+    return engines, tp, dp, cfgT
 
 
-def run_continuous(args, eng, tp, dp, cfgT) -> None:
-    """Continuous batching: serve a Poisson trace with per-slot lifecycles."""
-    from repro.serving import ContinuousBatchingRuntime, Request, RequestQueue, WallClock
+def run_continuous(args, engines, tp, dp, cfgT) -> None:
+    """Continuous batching: serve a Poisson trace with per-slot lifecycles,
+    on one engine or a sharded fleet (``--replicas N``)."""
+    from repro.serving import (ContinuousBatchingRuntime, Request, RequestQueue,
+                               ShardedServingRuntime, WallClock)
 
     trace = make_request_trace(
         cfgT.vocab_size, args.requests, rate_rps=args.rate,
         prompt_len=(max(4, args.prompt_len // 2), args.prompt_len),
         max_new=args.max_new, seed=0,
     )
-    rt = ContinuousBatchingRuntime(
-        eng, tp, dp, n_slots=args.slots,
-        queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
-    )
+    if isinstance(engines, list):
+        rt = ShardedServingRuntime(
+            engines, tp, dp, n_slots=args.slots,
+            queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
+        )
+        label = f"{len(engines)} replicas x {args.slots} slots"
+    else:
+        rt = ContinuousBatchingRuntime(
+            engines, tp, dp, n_slots=args.slots,
+            queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
+        )
+        label = f"{args.slots} slots"
     accepted = rt.submit_trace(
         Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new)
         for r in trace
     )
     print(f"continuous: {accepted}/{len(trace)} requests accepted "
-          f"({args.slots} slots, Poisson rate {args.rate}/s, queue cap {args.queue_cap})")
+          f"({label}, Poisson rate {args.rate}/s, queue cap {args.queue_cap})")
     t0 = time.perf_counter()
     results = rt.run()
     wall = time.perf_counter() - t0
-    print(rt.stats.report())
+    print(rt.report() if isinstance(engines, list) else rt.stats.report())
     total = sum(len(v) for v in results.values())
     print(f"wall: {total} tokens in {wall:.1f}s ({total/wall:.1f} tok/s incl. compile); "
           f"{rt.queue.rejected} shed by admission control")
 
     if args.verify:
+        ref = engines[0] if isinstance(engines, list) else engines
         mismatches = 0
         for r in trace:
             if r.rid not in results:
                 continue
-            solo, _ = eng.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+            solo, _ = ref.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
             ok = results[r.rid] == solo[0]
             mismatches += 0 if ok else 1
-            print(f"verify req {r.rid}: {'byte-identical to solo generate()' if ok else 'MISMATCH'}")
+            where = ""
+            if isinstance(engines, list):
+                where = f" (replica {rt.replica_of(r.rid)})"
+            print(f"verify req {r.rid}: "
+                  f"{'byte-identical to solo generate()' if ok else 'MISMATCH'}{where}")
         if mismatches:
             raise SystemExit(f"{mismatches} request(s) diverged from solo generate()")
 
@@ -108,6 +145,9 @@ def main(argv=None):
     ap.add_argument("--n-draft", type=int, default=2)
     ap.add_argument("--continuous", action="store_true",
                     help="serve a Poisson trace through the continuous-batching runtime")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous: SpecEngine replicas on disjoint device groups "
+                         "(one global queue, depth-aware routing)")
     ap.add_argument("--slots", type=int, default=2, help="continuous: engine batch slots")
     ap.add_argument("--rate", type=float, default=2.0, help="continuous: Poisson arrival rate (req/s)")
     ap.add_argument("--queue-cap", type=int, default=64, help="continuous: admission-control queue cap")
@@ -115,25 +155,31 @@ def main(argv=None):
                     help="continuous: skip byte-identical check vs solo generate()")
     args = ap.parse_args(argv)
 
+    replicas = args.replicas if args.continuous else 1
     eng, tp, dp, cfgT = build_engine(
         args.target_arch, args.draft_arch, mode=args.mode, bs=args.bs, w=args.w,
         d=args.d or 2, max_new=args.max_new, n_target=args.n_target, n_draft=args.n_draft,
+        replicas=replicas,
     )
+    eng0 = eng[0] if isinstance(eng, list) else eng
 
     # profile pass (paper §5.5): pick d from measured draft/target times
     if args.d == 0:
         import dataclasses
 
         prompt = np.zeros((1, args.prompt_len), np.int32)
-        prof = eng.profile(tp, dp, prompt)
+        prof = eng0.profile(tp, dp, prompt)
         d_lo, d_hi = candidate_depths(prof)
-        eng.cfg = dataclasses.replace(eng.cfg, d=d_lo)
+        d_cfg = dataclasses.replace(eng0.cfg, d=d_lo)
+        for e in set(eng) if isinstance(eng, list) else {eng}:
+            e.cfg = d_cfg
         print(f"profile: t_draft={prof.t_draft_s*1e3:.1f}ms t_target={prof.t_target_s*1e3:.1f}ms "
               f"-> d in {{{d_lo},{d_hi}}}, using d={d_lo}")
 
     if args.continuous:
         run_continuous(args, eng, tp, dp, cfgT)
         return
+    eng = eng0
 
     total_toks, total_s = 0, 0.0
     for i, prompt in enumerate(make_request_stream(cfgT.vocab_size, args.prompt_len, 1, args.requests)):

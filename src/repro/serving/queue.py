@@ -7,6 +7,14 @@ FIFO in arrival order, with two admission gates:
   * arrival-time gating: a request only becomes poppable once the serving
     clock has reached its ``arrival_s`` (replaying a recorded/Poisson trace
     behaves like live traffic).
+
+Internally the queue is two deques: ``_ready`` (requests whose arrival time
+is at or before the highest ``now`` seen so far) and ``_future`` (not yet
+arrived).  Because submissions are arrival-ordered, every ``_future`` entry
+arrives after every ``_ready`` entry, so popping ``_ready``'s head is always
+globally FIFO and ``depth()`` is just ``len(_ready)`` — O(1) for the
+monotonic clocks the runtimes use (each request crosses the boundary exactly
+once), instead of rescanning the whole backlog every round.
 """
 
 from __future__ import annotations
@@ -38,10 +46,20 @@ class Request:
 class RequestQueue:
     def __init__(self, cap: int = 64):
         self.cap = cap
-        self._q: collections.deque[Request] = collections.deque()
+        self._ready: collections.deque[Request] = collections.deque()
+        self._future: collections.deque[Request] = collections.deque()
         self.submitted = 0
         self.rejected = 0
         self._last_arrival = float("-inf")
+        self._now_w = float("-inf")  # arrival watermark: max ``now`` seen
+
+    def _advance(self, now: float) -> None:
+        """Migrate newly arrived requests across the ready/future boundary
+        (amortized O(1): each request crosses once under a monotonic clock)."""
+        if now > self._now_w:
+            self._now_w = now
+        while self._future and self._future[0].arrival_s <= now:
+            self._ready.append(self._future.popleft())
 
     def reject(self, req: Request) -> bool:
         """Count a request rejected by an external admission gate (e.g. the
@@ -52,37 +70,53 @@ class RequestQueue:
 
     def submit(self, req: Request) -> bool:
         """Admission control: returns False (and counts the shed) on a full
-        queue.  Submissions must come in arrival order (trace replay); an
-        out-of-order submission raises without touching the counters, so
-        ``submitted == queued + rejected`` always holds."""
-        if req.arrival_s < self._last_arrival:
-            raise ValueError("submissions must be ordered by arrival_s")
+        queue.  FUTURE submissions must come in arrival order (trace replay);
+        an out-of-order future submission raises without touching the
+        counters, so ``submitted == queued + rejected`` always holds.  An
+        already-arrived submission (``arrival_s`` at or behind the watermark)
+        is always orderable — it queues behind everything already here, in
+        submission order — so live submits racing a trace feed cannot poison
+        the queue (the ready/future split stays sorted either way)."""
+        if req.arrival_s > self._now_w and req.arrival_s < self._last_arrival:
+            raise ValueError("future submissions must be ordered by arrival_s")
         self.submitted += 1
-        if len(self._q) >= self.cap:
+        if len(self._ready) + len(self._future) >= self.cap:
             self.rejected += 1
             return False
-        self._last_arrival = req.arrival_s
-        self._q.append(req)
+        self._last_arrival = max(self._last_arrival, req.arrival_s)
+        if req.arrival_s <= self._now_w:
+            self._ready.append(req)
+        else:
+            self._future.append(req)
         return True
 
     def pop_ready(self, now: float) -> Request | None:
         """Next request whose arrival time has passed, or None."""
-        if self._q and self._q[0].arrival_s <= now:
-            return self._q.popleft()
+        self._advance(now)
+        # the watermark may sit ahead of a non-monotonic probe: re-check the
+        # head's arrival against THIS ``now`` so gating stays exact
+        if self._ready and self._ready[0].arrival_s <= now:
+            return self._ready.popleft()
         return None
 
     def next_arrival(self) -> float | None:
         """Arrival time of the head request (None when empty)."""
-        return self._q[0].arrival_s if self._q else None
+        if self._ready:
+            return self._ready[0].arrival_s
+        return self._future[0].arrival_s if self._future else None
 
     def depth(self, now: float) -> int:
-        """Requests that have arrived and are waiting for a slot."""
-        return sum(1 for r in self._q if r.arrival_s <= now)
+        """Requests that have arrived and are waiting for a slot.  O(1) for
+        monotonic ``now``; a probe behind the watermark rescans exactly."""
+        if now < self._now_w:
+            return sum(1 for r in self._ready if r.arrival_s <= now)
+        self._advance(now)
+        return len(self._ready)
 
     @property
     def pending(self) -> int:
         """All waiting requests, including not-yet-arrived trace entries."""
-        return len(self._q)
+        return len(self._ready) + len(self._future)
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._ready) + len(self._future)

@@ -1,22 +1,26 @@
-"""ContinuousBatchingRuntime — multiplex many independent requests through
-one SpecEngine with per-slot lifecycles.
+"""Continuous-batching serving: per-slot request lifecycles over SpecEngine.
 
 The engine's jitted round (``SpecEngine.step``) always advances all B batch
-rows; this runtime gives each row (a *slot*) its own request lifecycle:
+rows; ``EngineStepper`` gives each row (a *slot*) its own request lifecycle:
 
-  admit   — pop an arrived request from the queue into a free slot
-            (solo prefill installed into the slot's cache rows, per-slot
-            tree re-seed) — neighbors keep decoding untouched;
+  admit   — install an arrived request into a free slot (solo prefill into
+            the slot's cache rows, per-slot tree re-seed) — neighbors keep
+            decoding untouched;
   decode  — mixed-progress rounds: every occupied slot emits its verified
             tokens each round, streamed to the caller as they land;
   retire  — on EOS / max_new / cache budget the slot is released (tree
             parked, KV rows zeroed) and immediately backfilled from the
             queue on the next loop turn.
 
-Because greedy verification makes each row's emitted stream equal target-only
-greedy decoding regardless of what the other rows are doing, a request's
-output is byte-identical to a solo ``generate()`` run no matter when it was
-admitted (tests/test_serving.py asserts this).
+``ContinuousBatchingRuntime`` drives ONE stepper over a ``RequestQueue``;
+``ShardedServingRuntime`` (repro.serving.router) drives N of them over one
+global queue with depth-aware routing.  Both share the same stepper, so the
+slot lifecycle — and therefore the correctness contract — has exactly one
+implementation: because greedy verification makes each row's emitted stream
+equal target-only greedy decoding regardless of what the other rows are
+doing, a request's output is byte-identical to a solo ``generate()`` run no
+matter when it was admitted or which replica served it (tests/test_serving.py
+and tests/test_router.py assert this).
 
 The clock is injectable: ``WallClock`` replays a trace against real time
 (sleeping until the next arrival when idle); ``VirtualClock`` advances a
@@ -88,7 +92,264 @@ class _Active:
     truncated: bool = False
 
 
-class ContinuousBatchingRuntime:
+class EngineStepper:
+    """The per-engine admit/absorb/retire loop over one SpecEngine state.
+
+    One stepper owns one ``EngineState`` of ``n_slots`` rows plus the
+    host-side slot bookkeeping; the serving runtimes own the queue, the
+    clock, and the decision of WHICH stepper a request lands on.  All
+    device work (``admit`` prefills, ``step`` rounds) dispatches onto this
+    engine's own mesh pair, so in a sharded fleet one replica's admission
+    prefill is enqueued asynchronously on its device groups and never
+    blocks another replica's decode round (the host only syncs inside
+    ``SpecEngine.step``'s verified-token transfer).
+    """
+
+    def __init__(self, engine, tparams, dparams, n_slots: int, *,
+                 stats: ServerStats | None = None,
+                 stream: Callable[[int, list, bool], None] | None = None,
+                 results: dict | None = None,
+                 replica: int = 0):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.engine, self.tparams, self.dparams = engine, tparams, dparams
+        self.n_slots = n_slots
+        self.replica = replica
+        self.stats = stats if stats is not None else ServerStats()
+        self.stream = stream
+        self.results = results if results is not None else {}
+        self.state = engine.init_state(n_slots)
+        self.slots: list[_Active | None] = [None] * n_slots
+        # the engine's KV-budget bound (shared with generate(), so serving
+        # truncates at exactly the same token as a solo run)
+        self.plen_limit = engine.plen_budget
+
+    # ------------------------------------------------------------------
+    @property
+    def occupied(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self.slots)
+
+    @property
+    def load(self) -> float:
+        """Occupancy fraction in [0, 1] — the routing signal."""
+        return self.occupied / self.n_slots
+
+    # ------------------------------------------------------------------
+    def admit(self, req: Request, now: float) -> int:
+        """Install ``req`` into the first free slot; returns the slot.  The
+        caller supplies ONE timestamp used for both the arrival gate and the
+        ``on_admit`` stamp, so ``queue_s``/TTFT cannot be skewed by clock
+        reads straddling the prefill dispatch."""
+        slot = self.slots.index(None)
+        self.state = self.engine.admit_slot(
+            self.tparams, self.dparams, self.state, slot, req.prompt)
+        self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
+        self.stats.on_admit(req.rid, slot, req.arrival_s, now, replica=self.replica)
+        return slot
+
+    def step(self):
+        """One jitted engine round for every slot; returns the StepResult
+        (absorb it with ``absorb_round`` after the clock has advanced)."""
+        self.state, res = self.engine.step(self.tparams, self.dparams, self.state)
+        return res
+
+    def absorb_round(self, res, now: float) -> None:
+        """Fold one StepResult into every occupied slot, retiring the rows
+        that finished (EOS / max_new / cache budget)."""
+        for slot, act in enumerate(self.slots):
+            if act is None:
+                continue
+            self._absorb(slot, act, res, now)
+            if act.done:
+                self._retire(slot, act, now)
+
+    def _absorb(self, slot: int, act: _Active, res, now: float) -> None:
+        """Append one StepResult row's verified tokens up to EOS/max_new,
+        stream them, update the plen mirror."""
+        # per-request eos/max_new fall back to the engine's, so the
+        # byte-identical contract vs solo generate() holds for any SpecConfig
+        eos = act.req.eos_id if act.req.eos_id is not None else self.engine.cfg.eos_id
+        max_new = act.req.max_new if act.req.max_new is not None else self.engine.cfg.max_new
+        new, act.done = absorb_emitted(
+            act.out, res.emitted[slot], res.n_emitted[slot], max_new, eos)
+        act.plen += int(res.n_emitted[slot])
+        if act.plen >= self.plen_limit and not act.done:  # cache budget
+            act.done = act.truncated = True
+        self.stats.on_tokens(act.req.rid, len(new), int(res.n_accepted[slot]), now)
+        if self.stream is not None and (new or act.done):
+            self.stream(act.req.rid, new, act.done)
+
+    def _retire(self, slot: int, act: _Active, now: float) -> None:
+        self.results[act.req.rid] = act.out
+        self.state = self.engine.release_slot(self.state, slot)
+        self.slots[slot] = None
+        self.stats.on_finish(act.req.rid, now, truncated=act.truncated)
+
+
+class ServingRuntimeBase:
+    """The serve loop over a fleet of steppers: trace submission, arrival
+    feeding, routed admission, the round loop, and idle handling — shared by
+    the single-engine runtime (a 1-stepper fleet) and the sharded runtime
+    (N steppers), so both admission semantics and the round schedule have
+    exactly one implementation.
+
+    Subclasses call ``_init_admission`` then ``_init_fleet`` from their
+    constructors.
+    """
+
+    def _init_admission(self, queue: RequestQueue | None, clock) -> None:
+        self.queue = queue if queue is not None else RequestQueue()
+        self.clock = clock if clock is not None else WallClock()
+        self.results: dict[int, list] = {}
+        # trace entries whose arrival time is still in the future; they join
+        # the queue when the clock reaches them, so BOTH admission gates (the
+        # queue cap and the prompt-length bound) shed on ARRIVED traffic —
+        # live semantics — not at trace-submission time
+        self._pending: collections.deque[Request] = collections.deque()
+        self._started = False  # pre-run submissions gate against t=0
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  A request with a future ``arrival_s`` is held
+        outside the queue and faces BOTH admission gates — the queue cap and
+        the engine's prompt-length bound — when its arrival time comes, so
+        ``RequestQueue.submitted``/``rejected`` count live traffic, not trace
+        length.  An already-arrived request is adjudicated immediately:
+        rejected (False) when its prompt cannot fit the cache budget or the
+        queue is full."""
+        # before run() the serving timeline hasn't started: arrivals compare
+        # against t=0, not against however long engine construction took
+        now = self.clock.now() if self._started else 0.0
+        if req.arrival_s > now:
+            if self._pending and req.arrival_s < self._pending[-1].arrival_s:
+                raise ValueError("submissions must be ordered by arrival_s")
+            self._pending.append(req)
+            return True
+        # a live submit after its arrival time arrives NOW on the serving
+        # timeline, keeping queue ordering intact (a copy, so the caller's
+        # Request is not mutated); trace entries fed by _feed_arrived keep
+        # their true arrival_s — queueing delay belongs in their TTFT
+        if req.arrival_s < now:
+            req = dataclasses.replace(req, arrival_s=now)
+        return self._arrive(req)
+
+    def _arrive(self, req: Request) -> bool:
+        """Run the arrival-time admission gates for one request."""
+        if req.prompt.size >= self._plen_limit:
+            return self.queue.reject(req)
+        return self.queue.submit(req)
+
+    def _feed_arrived(self) -> None:
+        """Move trace entries whose arrival time has passed through the
+        arrival gates (where the cap / prompt bound may shed them)."""
+        now = self.clock.now()
+        while self._pending and self._pending[0].arrival_s <= now:
+            self._arrive(self._pending.popleft())
+
+    def submit_trace(self, requests) -> int:
+        """Submit an iterable of Requests (arrival-ordered); returns #accepted
+        (future arrivals count as accepted here and are adjudicated on
+        arrival)."""
+        return sum(1 for r in requests if self.submit(r))
+
+    def _next_arrival(self) -> float | None:
+        nxt = self.queue.next_arrival()
+        if nxt is None and self._pending:
+            nxt = self._pending[0].arrival_s
+        return nxt
+
+    def _start_run(self) -> bool:
+        """First run() call re-zeros the clock (construction-time jit
+        compiles must not consume the trace's arrival schedule); later runs
+        keep the original timeline.  Returns True on the first start."""
+        if self._started:
+            return False
+        self._started = True
+        self.clock.reset()
+        return True
+
+    # ---- the fleet loop ----------------------------------------------
+    def _init_fleet(self, steppers: list[EngineStepper]) -> None:
+        self.steppers = steppers
+        # replicas could in principle differ; admission must fit the tightest
+        self._plen_limit = min(s.plen_limit for s in steppers)
+        self._seq = 0
+        self._last_dispatch = [-1] * len(steppers)
+
+    @property
+    def occupied(self) -> int:
+        return sum(s.occupied for s in self.steppers)
+
+    def _route(self) -> int | None:
+        """Pick the admission target: least-loaded stepper (occupancy
+        fraction) among those with a free slot; FIFO tie-break — the stepper
+        whose last admission is oldest — so equal load spreads round-robin.
+        None when the fleet is full.  (With one stepper this degenerates to
+        "is a slot free".)"""
+        best_key, best = None, None
+        for i, st in enumerate(self.steppers):
+            if not st.has_free_slot:
+                continue
+            key = (st.load, self._last_dispatch[i])
+            if best_key is None or key < best_key:
+                best_key, best = key, i
+        return best
+
+    def _admit_ready(self) -> None:
+        """Drain arrived requests into free slots fleet-wide (FIFO), one
+        routing decision per request; each admission reads the clock ONCE —
+        the same timestamp gates the pop and stamps ``on_admit``."""
+        while True:
+            target = self._route()
+            if target is None:
+                return
+            now = self.clock.now()
+            req = self.queue.pop_ready(now)
+            if req is None:
+                return
+            self.steppers[target].admit(req, now)
+            self._seq += 1
+            self._last_dispatch[target] = self._seq
+
+    def run(self) -> dict[int, list]:
+        """Serve until the queue drains and every slot retires.  Returns the
+        merged {rid: emitted tokens}; telemetry accumulates in each stepper's
+        ServerStats."""
+        if self._start_run():
+            t0 = self.clock.now()
+            for st in self.steppers:
+                st.stats.started_s = t0  # later runs keep the original
+                # start so summary() throughput spans all serving
+        while self._pending or self.queue.pending or self.occupied:
+            self._feed_arrived()
+            self._admit_ready()
+            busy = [st for st in self.steppers if st.occupied]
+            if not busy:
+                nxt = self._next_arrival()
+                if nxt is None:
+                    break
+                self.clock.wait_until(nxt)  # idle: jump to the next arrival
+                continue
+            # one global round: every busy stepper steps (concurrent across
+            # disjoint device groups on real hardware), the clock ticks once,
+            # then every stepper absorbs and retires
+            stepped = [(st, st.step()) for st in busy]
+            self.clock.on_round()
+            now = self.clock.now()
+            depth = self.queue.depth(now)
+            for st, res in stepped:
+                st.stats.on_round(st.occupied, depth)
+                st.absorb_round(res, now)
+        t1 = self.clock.now()
+        for st in self.steppers:
+            st.stats.finished_s = t1
+        return self.results
+
+
+class ContinuousBatchingRuntime(ServingRuntimeBase):
     """Drives one SpecEngine state of ``n_slots`` batch rows over a request
     queue.  ``stream(rid, new_tokens, done)`` is called once per round per
     occupied slot with that round's freshly verified tokens."""
@@ -98,127 +359,19 @@ class ContinuousBatchingRuntime:
                  clock=None,
                  stats: ServerStats | None = None,
                  stream: Callable[[int, list, bool], None] | None = None):
-        if n_slots < 1:
-            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
-        self.engine, self.tparams, self.dparams = engine, tparams, dparams
-        self.n_slots = n_slots
-        self.queue = queue if queue is not None else RequestQueue()
-        self.clock = clock if clock is not None else WallClock()
+        self._init_admission(queue, clock)
         self.stats = stats if stats is not None else ServerStats()
-        self.stream = stream
-        self.state = engine.init_state(n_slots)
-        self.slots: list[_Active | None] = [None] * n_slots
-        self.results: dict[int, list] = {}
-        # trace entries whose arrival time is still in the future; they join
-        # the queue when the clock reaches them, so the queue cap sheds on
-        # ARRIVED backlog (live-traffic semantics), not on trace length
-        self._pending: collections.deque[Request] = collections.deque()
-        self._started = False  # pre-run submissions gate against t=0
-        # verify rows reach plen-1+bs and the re-rooted tree needs headroom:
-        # same safety margin generate() uses before its budget break
-        self._plen_limit = min(engine.S_max_t, engine.S_max_d) - 2 * engine.cfg.bs
+        self.stepper = EngineStepper(
+            engine, tparams, dparams, n_slots,
+            stats=self.stats, stream=stream, results=self.results)
+        self._init_fleet([self.stepper])
+        self.engine, self.n_slots = engine, n_slots
 
-    # ------------------------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        """Queue a request.  Rejected (False) when the prompt cannot fit the
-        engine's cache budget, or — for already-arrived requests — when the
-        queue is full.  A request with a future ``arrival_s`` is held outside
-        the queue and faces the cap when its arrival time comes."""
-        if req.prompt.size >= self._plen_limit:
-            return self.queue.reject(req)
-        # before run() the serving timeline hasn't started: arrivals compare
-        # against t=0, not against however long engine construction took
-        now = self.clock.now() if self._started else 0.0
-        if req.arrival_s > now:
-            if self._pending and req.arrival_s < self._pending[-1].arrival_s:
-                raise ValueError("submissions must be ordered by arrival_s")
-            self._pending.append(req)
-            return True
-        # already arrived (e.g. a live submit after a trace was served): it
-        # arrives NOW on the serving timeline, keeping queue ordering intact
-        # (a copy, so the caller's Request is not mutated)
-        return self.queue.submit(dataclasses.replace(req, arrival_s=max(req.arrival_s, now)))
-
-    def _feed_arrived(self) -> None:
-        """Move trace entries whose arrival time has passed into the queue
-        (where the cap may shed them)."""
-        now = self.clock.now()
-        while self._pending and self._pending[0].arrival_s <= now:
-            self.queue.submit(self._pending.popleft())
-
-    def submit_trace(self, requests) -> int:
-        """Submit an iterable of Requests (arrival-ordered); returns #accepted."""
-        return sum(1 for r in requests if self.submit(r))
-
-    # ------------------------------------------------------------------
+    # back-compat views (tests and callers poke at the engine state directly)
     @property
-    def occupied(self) -> int:
-        return sum(1 for s in self.slots if s is not None)
+    def state(self):
+        return self.stepper.state
 
-    def _admit_ready(self) -> None:
-        """Backfill every free slot with an arrived request (FIFO)."""
-        now = self.clock.now()
-        for slot in range(self.n_slots):
-            if self.slots[slot] is not None:
-                continue
-            req = self.queue.pop_ready(now)
-            if req is None:
-                return
-            self.state = self.engine.admit_slot(
-                self.tparams, self.dparams, self.state, slot, req.prompt)
-            self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
-            self.stats.on_admit(req.rid, slot, req.arrival_s, self.clock.now())
-
-    def _retire(self, slot: int, act: _Active) -> None:
-        self.results[act.req.rid] = act.out
-        self.state = self.engine.release_slot(self.state, slot)
-        self.slots[slot] = None
-        self.stats.on_finish(act.req.rid, self.clock.now(), truncated=act.truncated)
-
-    def _absorb(self, slot: int, act: _Active, res) -> None:
-        """Fold one StepResult row into the slot's request: append verified
-        tokens up to EOS/max_new, stream them, update the plen mirror."""
-        # per-request eos/max_new fall back to the engine's, so the
-        # byte-identical contract vs solo generate() holds for any SpecConfig
-        eos = act.req.eos_id if act.req.eos_id is not None else self.engine.cfg.eos_id
-        max_new = act.req.max_new if act.req.max_new is not None else self.engine.cfg.max_new
-        new, act.done = absorb_emitted(
-            act.out, res.emitted[slot], res.n_emitted[slot], max_new, eos)
-        act.plen += int(res.n_emitted[slot])
-        if act.plen >= self._plen_limit and not act.done:  # cache budget
-            act.done = act.truncated = True
-        self.stats.on_tokens(act.req.rid, len(new), int(res.n_accepted[slot]),
-                             self.clock.now())
-        if self.stream is not None and (new or act.done):
-            self.stream(act.req.rid, new, act.done)
-
-    def run(self) -> dict[int, list]:
-        """Serve until the queue drains and every slot retires.  Returns
-        {rid: emitted tokens}; telemetry accumulates in ``self.stats``."""
-        if not self._started:
-            self._started = True
-            self.clock.reset()  # the trace timeline starts now
-            self.stats.started_s = self.clock.now()  # later runs keep the
-            # original start so summary() throughput spans all serving
-        while self._pending or self.queue.pending or self.occupied:
-            self._feed_arrived()
-            self._admit_ready()
-            if not self.occupied:
-                nxt = self.queue.next_arrival()
-                if nxt is None and self._pending:
-                    nxt = self._pending[0].arrival_s
-                if nxt is None:
-                    break
-                self.clock.wait_until(nxt)  # idle: jump to the next arrival
-                continue
-            self.state, res = self.engine.step(self.tparams, self.dparams, self.state)
-            self.clock.on_round()
-            self.stats.on_round(self.occupied, self.queue.depth(self.clock.now()))
-            for slot, act in enumerate(self.slots):
-                if act is None:
-                    continue
-                self._absorb(slot, act, res)
-                if act.done:
-                    self._retire(slot, act)
-        self.stats.finished_s = self.clock.now()
-        return self.results
+    @property
+    def slots(self):
+        return self.stepper.slots

@@ -18,6 +18,7 @@ import numpy as np
 class RequestRecord:
     rid: int
     slot: int = -1
+    replica: int = 0  # which engine replica served the request (sharded runtime)
     arrival_s: float = 0.0
     admitted_s: float = 0.0
     first_token_s: float | None = None
@@ -70,10 +71,11 @@ class ServerStats:
         self.finished_s: float = 0.0
 
     # ---- runtime hooks ---------------------------------------------------
-    def on_admit(self, rid: int, slot: int, arrival_s: float, now: float) -> None:
+    def on_admit(self, rid: int, slot: int, arrival_s: float, now: float,
+                 replica: int = 0) -> None:
         self.records[rid] = RequestRecord(
-            rid=rid, slot=slot, arrival_s=arrival_s, admitted_s=now,
-            admit_round=self.rounds,
+            rid=rid, slot=slot, replica=replica, arrival_s=arrival_s,
+            admitted_s=now, admit_round=self.rounds,
         )
 
     def on_round(self, occupied: int, queue_depth: int) -> None:
@@ -138,3 +140,68 @@ class ServerStats:
             f"occupancy {s['mean_occupancy']:.2f}, acceptance {s['mean_acceptance']:.2f}"
         )
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# multi-replica aggregation (sharded runtime: one ServerStats per replica)
+# ---------------------------------------------------------------------------
+
+
+def merge_summary(per_replica: list["ServerStats"]) -> dict:
+    """Fold N per-replica ServerStats into one fleet summary: global TTFT
+    percentiles and throughput (tokens over the union of serving windows),
+    plus the per-replica occupancy/round breakdown that shows whether the
+    router kept the fleet balanced."""
+    recs = [r for st in per_replica for r in st.finished_records()]
+    ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
+    total_tokens = sum(r.n_tokens for r in recs)
+    started = min((st.started_s for st in per_replica), default=0.0)
+    finished = max((st.finished_s for st in per_replica), default=0.0)
+    wall = max(finished - started, 1e-9)
+    return {
+        "n_replicas": len(per_replica),
+        "n_finished": len(recs),
+        "total_tokens": total_tokens,
+        "throughput_tok_s": total_tokens / wall,
+        "ttft_p50_s": percentile(ttfts, 50),
+        "ttft_p99_s": percentile(ttfts, 99),
+        "mean_occupancy": (
+            float(np.mean([st.mean_occupancy for st in per_replica]))
+            if per_replica else 0.0
+        ),
+        "per_replica_occupancy": [st.mean_occupancy for st in per_replica],
+        "per_replica_finished": [len(st.finished_records()) for st in per_replica],
+        "per_replica_rounds": [st.rounds for st in per_replica],
+        "mean_acceptance": (
+            float(np.mean([r.acceptance for r in recs])) if recs else 0.0
+        ),
+    }
+
+
+def fleet_report(per_replica: list["ServerStats"]) -> str:
+    """Human-readable fleet report: every request row (tagged with the
+    replica that served it) in rid order, then per-replica occupancy, then
+    the merged aggregate line."""
+    lines = ["rid rep slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok"]
+    allrecs = [r for st in per_replica for r in st.records.values()]
+    for r in sorted(allrecs, key=lambda r: r.rid):
+        ttft = f"{r.ttft_s:7.3f}" if r.ttft_s is not None else "      -"
+        tps = f"{r.tok_per_s:6.1f}" if r.tok_per_s is not None else "     -"
+        lines.append(
+            f"{r.rid:3d} {r.replica:3d} {r.slot:4d} {r.arrival_s:7.3f} {r.admitted_s:6.3f} "
+            f"   [{r.admit_round:4d},{r.finish_round:4d})  {ttft} {tps} "
+            f"{r.acceptance:7.2f} {r.n_tokens:5d}"
+            + ("  TRUNCATED(kv-budget)" if r.truncated else "")
+        )
+    s = merge_summary(per_replica)
+    for i, st in enumerate(per_replica):
+        lines.append(
+            f"replica {i}: {len(st.finished_records())} finished over {st.rounds} rounds, "
+            f"occupancy {st.mean_occupancy:.2f}"
+        )
+    lines.append(
+        f"fleet: {s['n_finished']} finished, {s['throughput_tok_s']:.1f} tok/s, "
+        f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
+        f"acceptance {s['mean_acceptance']:.2f}"
+    )
+    return "\n".join(lines)

@@ -21,6 +21,28 @@ def test_make_serving_mesh_fallback():
     assert "model" in tgt.axis_names and "model" in drf.axis_names
 
 
+def test_make_serving_mesh_replicas():
+    """replicas=N returns N (target, draft) pairs; with too few devices every
+    pair falls back to the shared single-device mesh (correctness-only), and
+    replicas=1 keeps the historical 2-tuple signature."""
+    import pytest
+
+    pairs = make_serving_mesh(6, 2, replicas=2)
+    assert isinstance(pairs, list) and len(pairs) == 2
+    for tgt, drf in pairs:
+        assert "model" in tgt.axis_names and "model" in drf.axis_names
+        assert tgt.devices.size == 1 and drf.devices.size == 1  # CPU fallback
+    single = make_serving_mesh(6, 2, replicas=1)
+    assert isinstance(single, tuple) and len(single) == 2
+    with pytest.raises(ValueError):
+        make_serving_mesh(6, 2, replicas=0)
+    # partial fit (enough devices for one replica, not all) must raise, not
+    # silently overlap later replicas onto device 0: on this 1-device host a
+    # 1-device group fits once but not twice
+    with pytest.raises(ValueError):
+        make_serving_mesh(1, 0, replicas=2)
+
+
 def test_reshard_params_preserves_values():
     cfg = get_config("qwen2.5-14b", smoke=True)
     m = make_model(cfg)

@@ -88,6 +88,29 @@ def test_live_submit_after_trace_run(serving_engine):
     assert rt.stats.summary()["n_finished"] == 2
 
 
+def test_live_submit_mid_run_does_not_break_trace_feed(serving_engine):
+    """A stream-callback submit() racing a not-yet-fed trace entry: the live
+    request is clamped to 'now', and the trace entry (older true arrival)
+    still feeds cleanly on the next loop turn — no ordering crash, all three
+    requests served."""
+    eng, tp, dp = serving_engine
+    sent = []
+
+    def stream(rid, toks, done):
+        if not sent and rt.clock.now() >= 3.0:
+            sent.append(rid)
+            assert rt.submit(Request(rid=2, prompt=_prompt(8), max_new=4))
+
+    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=1, clock=VirtualClock(),
+                                   stream=stream)
+    rt.submit(Request(rid=0, prompt=_prompt(4), arrival_s=0.0, max_new=12))
+    rt.submit(Request(rid=1, prompt=_prompt(5), arrival_s=2.5, max_new=4))
+    results = rt.run()
+    assert sorted(results) == [0, 1, 2]
+    solo, _ = eng.generate(tp, dp, _prompt(8).reshape(1, -1), max_new=4)
+    assert results[2] == solo[0]
+
+
 def test_eos_inherited_from_engine(dense_pair, serving_engine):
     """A Request without an explicit eos_id follows the ENGINE's eos_id, so
     the byte-identical contract holds for engines that stop early."""
@@ -103,6 +126,40 @@ def test_eos_inherited_from_engine(dense_pair, serving_engine):
     rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=1, clock=VirtualClock())
     rt.submit(Request(rid=0, prompt=prompt, max_new=20))
     assert rt.run()[0] == solo[0]
+
+
+def test_immediate_eos_request_record_shape(serving_engine):
+    """A request whose very first verified token is its EOS: it finishes in
+    its first round with exactly that one token, and the telemetry record is
+    fully formed (TTFT present, finish stamped, one-round lifetime)."""
+    eng, tp, dp = serving_engine
+    prompt = _prompt(13)
+    probe, _ = eng.generate(tp, dp, prompt.reshape(1, -1), max_new=4)
+    eos = probe[0][0]  # the first greedy token
+    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=2, clock=VirtualClock())
+    rt.submit(Request(rid=0, prompt=prompt, max_new=16, eos_id=eos))
+    results = rt.run()
+    assert results[0] == [eos]
+    rec = rt.stats.records[0]
+    assert rec.n_tokens == 1 and rec.n_rounds == 1
+    assert rec.ttft_s is not None and rec.finish_s is not None
+    assert rec.finish_round == rec.admit_round + 1
+    assert rec.first_token_s == rec.finish_s
+    assert rec.tok_per_s is not None  # finish strictly after admit (one round)
+    s = rt.stats.summary()
+    assert s["n_finished"] == 1 and s["total_tokens"] == 1
+    assert s["ttft_p50_s"] == pytest.approx(rec.ttft_s)
+
+
+def test_plen_budget_single_definition(serving_engine):
+    """The KV-budget bound has ONE definition: the serving runtime inherits
+    engine.plen_budget verbatim (drift here silently breaks the
+    byte-identical contract for requests near the budget)."""
+    eng, tp, dp = serving_engine
+    assert eng.plen_budget == min(eng.S_max_t, eng.S_max_d) - 2 * eng.cfg.bs
+    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=1, clock=VirtualClock())
+    assert rt._plen_limit == eng.plen_budget
+    assert rt.stepper.plen_limit == eng.plen_budget
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +226,49 @@ def test_install_zero_slot_roundtrip():
 # ---------------------------------------------------------------------------
 
 
+def test_queue_depth_o1_bookkeeping():
+    """depth() is an O(1) arrived-count for monotonic ``now`` (the runtimes'
+    usage), stays exact as requests arrive/pop, and an out-of-order probe
+    behind the watermark still answers exactly."""
+    q = RequestQueue(cap=8)
+    for i in range(3):
+        q.submit(Request(rid=i, prompt=np.ones(4), arrival_s=float(i)))
+    assert q.depth(now=1.5) == 2
+    assert q.pop_ready(now=1.5).rid == 0
+    assert q.depth(now=1.5) == 1
+    assert q.pop_ready(now=1.5).rid == 1
+    assert q.pop_ready(now=1.5) is None  # rid 2 hasn't arrived
+    assert q.next_arrival() == 2.0
+    assert q.depth(now=2.5) == 1
+    # a submission at/behind the watermark is immediately arrived
+    q.submit(Request(rid=3, prompt=np.ones(4), arrival_s=2.5))
+    assert q.depth(now=2.5) == 2
+    assert q.pending == 2 and len(q) == 2
+    # non-monotonic probe: exact answer, not the cached watermark count
+    assert q.depth(now=0.0) == 0
+    assert q.depth(now=2.0) == 1
+
+
+def test_admission_gate_and_stamp_share_one_timestamp(serving_engine):
+    """_admit_ready reads the clock once per admission: the pop_ready gate
+    value IS the on_admit stamp (a clock that advances on every read would
+    otherwise skew queue_s/TTFT)."""
+    eng, tp, dp = serving_engine
+
+    class StutterClock(VirtualClock):
+        def now(self):  # every read advances: a double read is detectable
+            t, self._t = self._t, self._t + 1e-3
+            return t
+
+    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=1, clock=StutterClock())
+    gates = []
+    orig = rt.queue.pop_ready
+    rt.queue.pop_ready = lambda now: (gates.append(now), orig(now))[1]
+    rt.submit(Request(rid=0, prompt=_prompt(2), max_new=4))
+    rt.run()
+    assert rt.stats.records[0].admitted_s in gates
+
+
 def test_queue_admission_control():
     q = RequestQueue(cap=3)
     ok = [q.submit(Request(rid=i, prompt=np.ones(4), arrival_s=float(i))) for i in range(5)]
@@ -180,11 +280,17 @@ def test_queue_admission_control():
     r0 = q.pop_ready(now=0.0)
     assert r0.rid == 0  # FIFO
     assert q.next_arrival() == 1.0
-    # freed capacity admits again, but out-of-order arrivals are an error
+    # freed capacity admits again
     assert q.submit(Request(rid=9, prompt=np.ones(4), arrival_s=9.0))
-    assert q.pop_ready(now=9.0).rid == 1  # make room: cap check precedes order check
+    assert q.pop_ready(now=9.0).rid == 1
+    # an already-arrived submission is always orderable: it queues behind
+    # everything already here (live submits cannot poison the queue)
+    assert q.submit(Request(rid=10, prompt=np.ones(4), arrival_s=0.5))
+    assert q.pop_ready(now=9.0).rid == 2  # FIFO by insertion
+    # but FUTURE submissions must stay arrival-ordered (trace sanity)
+    assert q.submit(Request(rid=11, prompt=np.ones(4), arrival_s=20.0))
     with pytest.raises(ValueError):
-        q.submit(Request(rid=10, prompt=np.ones(4), arrival_s=0.5))
+        q.submit(Request(rid=12, prompt=np.ones(4), arrival_s=15.0))
 
 
 def test_burst_trace_invariants(serving_engine):
@@ -204,8 +310,26 @@ def test_burst_trace_invariants(serving_engine):
     assert all(len(v) == 8 for v in results.values())
     assert all(r.finish_s is not None for r in rt.stats.records.values())
     assert max(rt.stats.occupancy_samples) <= 2
-    # a prompt that cannot fit the cache budget is rejected at submit()
-    assert not rt.submit(Request(rid=99, prompt=np.ones(250, np.int32), arrival_s=99.0))
+    # an ARRIVED prompt that cannot fit the cache budget is rejected at submit()
+    assert not rt.submit(Request(rid=99, prompt=np.ones(250, np.int32), arrival_s=0.0))
+    assert rt.queue.rejected == 3
+
+
+def test_overlong_prompt_rejected_at_arrival_not_submit(serving_engine):
+    """A too-long prompt with a FUTURE arrival is accepted at submit time and
+    shed when it arrives — same live-traffic semantics as the queue cap — so
+    submitted/rejected counters reflect offered load, not trace length."""
+    eng, tp, dp = serving_engine
+    rt = ContinuousBatchingRuntime(eng, tp, dp, n_slots=1, clock=VirtualClock())
+    assert rt.submit(Request(rid=0, prompt=_prompt(3), arrival_s=0.0, max_new=8))
+    # deferred: nothing counted against the queue yet
+    assert rt.submit(Request(rid=1, prompt=np.ones(250, np.int32), arrival_s=5.0))
+    assert rt.queue.submitted == 1 and rt.queue.rejected == 0
+    results = rt.run()
+    assert sorted(results) == [0]
+    # the reject landed when the clock reached arrival_s=5.0
+    assert rt.queue.submitted == 2 and rt.queue.rejected == 1
+    assert 1 not in rt.stats.records
 
 
 def test_cap_sheds_on_arrived_backlog_not_trace_length(serving_engine):
