@@ -39,6 +39,18 @@ def write_csv(name: str, header, rows):
     return path
 
 
+def write_json(name: str, payload: dict):
+    """Structured BENCH JSON next to the CSVs (sections the perf trajectory
+    tracks, e.g. serving.json's ``phase_breakdown``)."""
+    import json
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def time_call(fn, iters=5, warmup=2):
     for _ in range(warmup):
         jax.block_until_ready(fn())

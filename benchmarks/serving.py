@@ -25,11 +25,12 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import write_csv, write_json
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecConfig, SpecEngine
 from repro.data import make_request_trace
 from repro.models.api import make_model
+from repro.obs import MetricsRegistry, Tracer, breakdown_report, phase_breakdown
 from repro.serving import Request, RequestQueue, ShardedServingRuntime, VirtualClock
 
 REPLICAS = (1, 2)
@@ -73,6 +74,10 @@ def run() -> None:
     rows = []
     peak_occ = []
     sustained = {}  # (replicas, rate) -> virtual tok/s
+    # one tracer across the whole sweep: the aggregate draft/verify/absorb
+    # round decomposition (wall time, jits warm) is the perf-trajectory signal
+    tracer = Tracer()
+    metrics = MetricsRegistry()
     for n_rep in REPLICAS:
         for rate in RATES:
             trace = make_request_trace(cfgT.vocab_size, N_REQUESTS, rate_rps=rate,
@@ -83,6 +88,7 @@ def run() -> None:
                 [eng] * n_rep, tp, dp, n_slots=N_SLOTS,
                 queue=RequestQueue(cap=2 * N_REQUESTS),
                 clock=VirtualClock(round_dt=0.1),  # 10 global rounds / virtual s
+                tracer=tracer, metrics=metrics,
             )
             rt.submit_trace(Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s,
                                     max_new=r.max_new) for r in trace)
@@ -108,6 +114,23 @@ def run() -> None:
                       "occupancy_per_replica", "shed"],
                      rows)
     print(f"  -> {path}")
+    # BENCH JSON: the sweep cells plus the measured round-time decomposition
+    # (draft vs verify fraction — the paper's imbalance) for the trajectory
+    bd = phase_breakdown(tracer)
+    jpath = write_json("serving.json", {
+        "cells": [
+            {"replicas": r[0], "offered_rate_rps": r[1], "finished": r[2],
+             "sustained_tok_s": r[3], "wall_tok_s": r[4],
+             "ttft_p50_s": r[5], "ttft_p99_s": r[6],
+             "occupancy_per_replica": r[7], "shed": r[8]}
+            for r in rows
+        ],
+        "phase_breakdown": bd,
+        "accept_depth_mean": metrics.histogram("serving_accept_depth",
+                                               replica="0").mean,
+    })
+    print(breakdown_report(bd))
+    print(f"  -> {jpath}")
     # sanity AFTER the CSV lands, so a violation can't discard data
     assert all(p <= N_SLOTS for p in peak_occ), peak_occ
     sat = max(RATES)  # saturating load: the sharding payoff must show

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import kv as kvm
 from repro.core import tree as T
+from repro.obs.trace import NULL_TRACER
 from repro.sharding import use_mesh
 
 
@@ -294,7 +295,8 @@ class SpecEngine:
             plan = self._select_plan(tr)
         return EngineState(tcache, dcache, tr, plan)
 
-    def step(self, tparams, dparams, state: EngineState, stats: SpecStats | None = None):
+    def step(self, tparams, dparams, state: EngineState, stats: SpecStats | None = None,
+             tracer=None, trace_track: str = "engine"):
         """One asynchronous round for every slot (the body of generate()):
         dispatch verification on the target group, concurrently expand the
         draft trees, sync the verified tokens to the host, then re-root /
@@ -303,35 +305,45 @@ class SpecEngine:
         Returns (state', StepResult).  Rows at different decode depths
         coexist: all per-row quantities (prefix length, masks, acceptance)
         live in the vmapped tree, so the serving runtime can drive rows with
-        mixed progress through the same jitted round."""
+        mixed progress through the same jitted round.
+
+        ``tracer`` (repro.obs) records the round's host-side phase spans —
+        verify_dispatch / draft_expand / sync_emitted / reroot_grow — on
+        ``trace_track`` (one track per serving replica); the default
+        NULL_TRACER path is free."""
         c = self.cfg
+        obs = tracer if tracer is not None else NULL_TRACER
         plan = self._bypass(state.plan) if c.draft_bypass else state.plan
         tr, dcache = state.tr, state.dcache
         draft_steps = 0
         # --- dispatch verification on the target group (async) -------------
-        with use_mesh(self.mesh_target):
-            acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
-                tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
-                plan.mask, plan.parent_pos, plan.valid,
-            )
+        with obs.span("verify_dispatch", trace_track):
+            with use_mesh(self.mesh_target):
+                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
+                    tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
+                    plan.mask, plan.parent_pos, plan.valid,
+                )
         # --- concurrently: d tree expansions on the draft group ------------
         if c.mode == "parallel":
-            with use_mesh(self.mesh_draft):
-                for _ in range(c.d):
-                    tr, dcache = self._expand(dparams, tr, dcache)
-                draft_steps += c.d
+            with obs.span("draft_expand", trace_track):
+                with use_mesh(self.mesh_draft):
+                    for _ in range(c.d):
+                        tr, dcache = self._expand(dparams, tr, dcache)
+                    draft_steps += c.d
         # --- sync point: verified tokens cross groups (host-mediated) ------
-        emitted_h = np.asarray(jax.device_get(emitted))
-        n_emitted_h = np.asarray(jax.device_get(n_emitted))
-        n_acc_h = np.asarray(jax.device_get(n_acc))
+        with obs.span("sync_emitted", trace_track):
+            emitted_h = np.asarray(jax.device_get(emitted))
+            n_emitted_h = np.asarray(jax.device_get(n_emitted))
+            n_acc_h = np.asarray(jax.device_get(n_acc))
         # --- re-root, fill, grow, select next batch (draft group) ----------
-        with use_mesh(self.mesh_draft):
-            tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
-            n_grow = c.d if c.mode == "serial" else self.grow_per_round
-            for _ in range(n_grow):
-                tr, dcache = self._expand(dparams, tr, dcache)
-            draft_steps += n_grow
-            new_plan = self._select_plan(tr)
+        with obs.span("reroot_grow", trace_track):
+            with use_mesh(self.mesh_draft):
+                tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
+                n_grow = c.d if c.mode == "serial" else self.grow_per_round
+                for _ in range(n_grow):
+                    tr, dcache = self._expand(dparams, tr, dcache)
+                draft_steps += n_grow
+                new_plan = self._select_plan(tr)
         if stats is not None:
             stats.add_round(n_emitted_h, n_acc_h)
             stats.draft_steps += draft_steps

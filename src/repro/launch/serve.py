@@ -16,6 +16,10 @@ printed, and each finished output is checked byte-identical against a solo
 ``generate()`` run (--no-verify to skip).  ``--replicas N`` shards the
 continuous runtime over N SpecEngine replicas on disjoint device groups
 (one global queue, least-loaded routing, per-replica + fleet telemetry).
+``--trace-out trace.json --metrics-out metrics.json`` records per-round
+phase spans (draft expand / verify / sync / reroot / absorb — viewable in
+ui.perfetto.dev) and a metrics snapshot with the round-time decomposition
+(repro.obs, docs/observability.md).
 On this CPU container all device groups map to the same device (correctness
 only); on a real slice ``--n-target``/``--n-draft`` select the disaggregated
 split carved once per replica.
@@ -77,9 +81,19 @@ def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="paralle
 
 def run_continuous(args, engines, tp, dp, cfgT) -> None:
     """Continuous batching: serve a Poisson trace with per-slot lifecycles,
-    on one engine or a sharded fleet (``--replicas N``)."""
+    on one engine or a sharded fleet (``--replicas N``).  With
+    ``--trace-out``/``--metrics-out`` the run is instrumented end to end
+    (repro.obs): per-round phase spans land in a Chrome/Perfetto-viewable
+    ``trace.json`` (or JSONL), the metrics snapshot (per-replica round
+    counters, accepted-depth histogram, TTFT, queue depth over time) plus
+    the draft/verify/absorb round decomposition land in the metrics JSON."""
+    from repro.obs import MetricsRegistry, Tracer, breakdown_report, phase_breakdown
     from repro.serving import (ContinuousBatchingRuntime, Request, RequestQueue,
                                ShardedServingRuntime, WallClock)
+
+    observed = bool(args.trace_out or args.metrics_out)
+    tracer = Tracer() if observed else None
+    metrics = MetricsRegistry() if observed else None
 
     trace = make_request_trace(
         cfgT.vocab_size, args.requests, rate_rps=args.rate,
@@ -90,12 +104,14 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
         rt = ShardedServingRuntime(
             engines, tp, dp, n_slots=args.slots,
             queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
+            tracer=tracer, metrics=metrics,
         )
         label = f"{len(engines)} replicas x {args.slots} slots"
     else:
         rt = ContinuousBatchingRuntime(
             engines, tp, dp, n_slots=args.slots,
             queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
+            tracer=tracer, metrics=metrics,
         )
         label = f"{args.slots} slots"
     accepted = rt.submit_trace(
@@ -111,6 +127,18 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
     total = sum(len(v) for v in results.values())
     print(f"wall: {total} tokens in {wall:.1f}s ({total/wall:.1f} tok/s incl. compile); "
           f"{rt.queue.rejected} shed by admission control")
+
+    if observed:
+        bd = phase_breakdown(tracer)
+        print(breakdown_report(bd))
+        if tracer.dropped:
+            print(f"trace ring buffer dropped {tracer.dropped} events")
+        if args.trace_out:
+            path = tracer.write(args.trace_out)
+            print(f"trace -> {path} (open in ui.perfetto.dev or chrome://tracing)")
+        if args.metrics_out:
+            path = metrics.write(args.metrics_out, extra={"phase_breakdown": bd})
+            print(f"metrics -> {path}")
 
     if args.verify:
         ref = engines[0] if isinstance(engines, list) else engines
@@ -153,6 +181,12 @@ def main(argv=None):
     ap.add_argument("--queue-cap", type=int, default=64, help="continuous: admission-control queue cap")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
                     help="continuous: skip byte-identical check vs solo generate()")
+    ap.add_argument("--trace-out", default=None,
+                    help="continuous: write phase spans here (.json = Chrome/"
+                         "Perfetto traceEvents, .jsonl = span per line)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="continuous: write the metrics snapshot + phase "
+                         "breakdown here (.json; .prom = Prometheus text)")
     args = ap.parse_args(argv)
 
     replicas = args.replicas if args.continuous else 1

@@ -1,0 +1,105 @@
+"""Round-time decomposition — the paper's draft/verify imbalance, measured.
+
+Folds a ``Tracer``'s spans into a per-round latency breakdown: how much of
+each serving round went to draft-tree work (expansion + KV reconciliation
+after re-root), target verification (dispatch + the verified-token device
+sync), and host-side absorption.  This is the baseline evidence the async
+disaggregation work (ROADMAP #1) needs — the whole point of running draft
+and target concurrently is to hide the smaller of the draft/verify fractions
+reported here.
+
+Span taxonomy (docs/observability.md):
+  round         one global serving round on one replica track
+  ├─ verify_dispatch   enqueue target verification (async dispatch)
+  ├─ draft_expand      the d concurrent tree expansions (parallel mode)
+  ├─ sync_emitted      host sync on the verified-token transfer
+  ├─ reroot_grow       tree re-root + KV fill + regrow + next plan
+  └─ absorb            host-side token absorption / retire / stream
+"""
+
+from __future__ import annotations
+
+# top-level phases inside one round span (nested spans, e.g. ``retire``
+# inside ``absorb``, are excluded so coverage never double-counts)
+ROUND_PHASES = ("verify_dispatch", "draft_expand", "sync_emitted",
+                "reroot_grow", "absorb")
+PHASE_GROUPS = {
+    "draft": ("draft_expand", "reroot_grow"),
+    "verify": ("verify_dispatch", "sync_emitted"),
+    "absorb": ("absorb",),
+}
+
+
+def phase_breakdown(tracer) -> dict:
+    """Decompose every ``round`` span into its phase children.
+
+    Returns per-phase totals/fractions, the draft/verify/absorb grouping,
+    and span coverage (fraction of round wall time accounted for by phase
+    spans — the instrument-completeness check; ≥0.95 means the trace
+    explains where each round's milliseconds went)."""
+    spans = tracer.spans()
+    rounds = sorted((s for s in spans if s.name == "round"),
+                    key=lambda s: (s.track, s.t0))
+    by_track: dict[str, list] = {}
+    for s in spans:
+        if s.name in ROUND_PHASES:
+            by_track.setdefault(s.track, []).append(s)
+    for v in by_track.values():
+        v.sort(key=lambda s: s.t0)
+
+    phase_s = dict.fromkeys(ROUND_PHASES, 0.0)
+    coverages: list[float] = []
+    round_total = 0.0
+    cursor = dict.fromkeys(by_track, 0)  # per-track scan position
+    for r in rounds:
+        round_total += r.dur
+        covered = 0.0
+        kids = by_track.get(r.track, ())
+        i = cursor.get(r.track, 0)
+        # skip children that ended before this round began (earlier rounds)
+        while i < len(kids) and kids[i].t0 < r.t0:
+            i += 1
+        cursor[r.track] = i
+        while i < len(kids) and kids[i].t0 < r.t1:
+            if kids[i].t1 <= r.t1:
+                phase_s[kids[i].name] += kids[i].dur
+                covered += kids[i].dur
+            i += 1
+        if r.dur > 0:
+            coverages.append(covered / r.dur)
+
+    out = {
+        "n_rounds": len(rounds),
+        "round_total_s": round_total,
+        "mean_round_s": round_total / len(rounds) if rounds else 0.0,
+        "phase_s": phase_s,
+        "phase_frac": {
+            k: (v / round_total if round_total else 0.0) for k, v in phase_s.items()
+        },
+        "coverage_mean": sum(coverages) / len(coverages) if coverages else 0.0,
+        "coverage_min": min(coverages) if coverages else 0.0,
+    }
+    for group, members in PHASE_GROUPS.items():
+        tot = sum(phase_s[m] for m in members)
+        out[f"{group}_s"] = tot
+        out[f"{group}_frac"] = tot / round_total if round_total else 0.0
+    return out
+
+
+def breakdown_report(bd: dict) -> str:
+    """Human-readable view of ``phase_breakdown`` output."""
+    if not bd["n_rounds"]:
+        return "phase breakdown: no rounds traced"
+    lines = [
+        f"phase breakdown over {bd['n_rounds']} rounds "
+        f"(mean round {bd['mean_round_s'] * 1e3:.2f} ms, "
+        f"span coverage mean={bd['coverage_mean']:.1%} min={bd['coverage_min']:.1%})"
+    ]
+    for name in ROUND_PHASES:
+        lines.append(f"  {name:15s} {bd['phase_s'][name] * 1e3:9.2f} ms "
+                     f"{bd['phase_frac'][name]:6.1%}")
+    lines.append(
+        f"  => draft {bd['draft_frac']:.1%} / verify {bd['verify_frac']:.1%} "
+        f"/ absorb {bd['absorb_frac']:.1%} of round wall time"
+    )
+    return "\n".join(lines)

@@ -54,10 +54,12 @@ class ShardedServingRuntime(ServingRuntimeBase):
     def __init__(self, engines, tparams, dparams, n_slots: int, *,
                  queue: RequestQueue | None = None,
                  clock=None,
-                 stream: Callable[[int, list, bool], None] | None = None):
+                 stream: Callable[[int, list, bool], None] | None = None,
+                 tracer=None,
+                 metrics=None):
         if not engines:
             raise ValueError("need at least one engine replica")
-        self._init_admission(queue, clock)
+        self._init_admission(queue, clock, tracer, metrics)
         tps = tparams if isinstance(tparams, list) else [tparams] * len(engines)
         dps = dparams if isinstance(dparams, list) else [dparams] * len(engines)
         if not (len(tps) == len(dps) == len(engines)):
@@ -65,7 +67,8 @@ class ShardedServingRuntime(ServingRuntimeBase):
         self._init_fleet([
             EngineStepper(eng, tp, dp, n_slots,
                           stats=ServerStats(), stream=stream,
-                          results=self.results, replica=i)
+                          results=self.results, replica=i,
+                          tracer=self.tracer, metrics=self.metrics)
             for i, (eng, tp, dp) in enumerate(zip(engines, tps, dps))
         ])
 

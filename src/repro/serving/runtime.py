@@ -36,8 +36,15 @@ import time
 from typing import Callable
 
 from repro.core.engine import absorb_emitted
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP_SPAN, NULL_TRACER
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.stats import ServerStats
+
+# accepted-depth histogram bucket for "replica admitted/finished" style
+# counters is per-engine (0..bs); TTFT spans queueing so it gets the wide
+# latency buckets below (virtual and wall clocks both land inside them)
+TTFT_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0)
 
 
 class WallClock:
@@ -109,7 +116,9 @@ class EngineStepper:
                  stats: ServerStats | None = None,
                  stream: Callable[[int, list, bool], None] | None = None,
                  results: dict | None = None,
-                 replica: int = 0):
+                 replica: int = 0,
+                 tracer=None,
+                 metrics: MetricsRegistry | None = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.engine, self.tparams, self.dparams = engine, tparams, dparams
@@ -123,6 +132,27 @@ class EngineStepper:
         # the engine's KV-budget bound (shared with generate(), so serving
         # truncates at exactly the same token as a solo run)
         self.plen_limit = engine.plen_budget
+        # ---- observability (repro.obs): spans on this replica's track, and
+        # cached metric handles so the hot path touches one object each
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.track = f"replica{replica}"
+        self._round_span = NOOP_SPAN
+        rep = str(replica)
+        m = self.metrics
+        self._m_rounds = m.counter("serving_rounds_total", replica=rep)
+        self._m_admitted = m.counter("serving_admitted_total", replica=rep)
+        self._m_finished = m.counter("serving_finished_total", replica=rep)
+        self._m_truncated = m.counter("serving_kv_truncations_total", replica=rep)
+        self._m_tokens = m.counter("serving_tokens_total", replica=rep)
+        # exact per-depth distribution: one bucket per possible accepted
+        # count (0..bs) — ROADMAP #2's adaptive-depth signal
+        self._m_accept = m.histogram(
+            "serving_accept_depth", buckets=tuple(range(engine.cfg.bs + 1)),
+            replica=rep)
+        self._m_ttft = m.histogram("serving_ttft_seconds", buckets=TTFT_BUCKETS,
+                                   replica=rep)
+        self._m_occupancy = m.series("serving_occupancy", replica=rep)
 
     # ------------------------------------------------------------------
     @property
@@ -145,27 +175,43 @@ class EngineStepper:
         ``on_admit`` stamp, so ``queue_s``/TTFT cannot be skewed by clock
         reads straddling the prefill dispatch."""
         slot = self.slots.index(None)
-        self.state = self.engine.admit_slot(
-            self.tparams, self.dparams, self.state, slot, req.prompt)
+        with self.tracer.span("admit_prefill", self.track,
+                              args={"rid": req.rid, "slot": slot,
+                                    "plen": int(req.prompt.size)}):
+            self.state = self.engine.admit_slot(
+                self.tparams, self.dparams, self.state, slot, req.prompt)
         self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
         self.stats.on_admit(req.rid, slot, req.arrival_s, now, replica=self.replica)
+        self._m_admitted.inc()
         return slot
 
     def step(self):
         """One jitted engine round for every slot; returns the StepResult
-        (absorb it with ``absorb_round`` after the clock has advanced)."""
-        self.state, res = self.engine.step(self.tparams, self.dparams, self.state)
+        (absorb it with ``absorb_round`` after the clock has advanced).
+
+        Opens this replica's ``round`` span; ``absorb_round`` closes it, so
+        the span brackets dispatch through absorption — the engine's phase
+        spans (verify/draft/sync/reroot) plus ``absorb`` are its children."""
+        self._round_span = self.tracer.begin("round", self.track)
+        self.state, res = self.engine.step(
+            self.tparams, self.dparams, self.state,
+            tracer=self.tracer, trace_track=self.track)
         return res
 
     def absorb_round(self, res, now: float) -> None:
         """Fold one StepResult into every occupied slot, retiring the rows
         that finished (EOS / max_new / cache budget)."""
-        for slot, act in enumerate(self.slots):
-            if act is None:
-                continue
-            self._absorb(slot, act, res, now)
-            if act.done:
-                self._retire(slot, act, now)
+        self._m_occupancy.append(now, self.occupied)  # pre-retire, as stats does
+        with self.tracer.span("absorb", self.track):
+            for slot, act in enumerate(self.slots):
+                if act is None:
+                    continue
+                self._absorb(slot, act, res, now)
+                if act.done:
+                    self._retire(slot, act, now)
+        self._m_rounds.inc()
+        self._round_span.end()
+        self._round_span = NOOP_SPAN
 
     def _absorb(self, slot: int, act: _Active, res, now: float) -> None:
         """Append one StepResult row's verified tokens up to EOS/max_new,
@@ -179,15 +225,26 @@ class EngineStepper:
         act.plen += int(res.n_emitted[slot])
         if act.plen >= self.plen_limit and not act.done:  # cache budget
             act.done = act.truncated = True
+        first = self.stats.records[act.req.rid].first_token_s is None
         self.stats.on_tokens(act.req.rid, len(new), int(res.n_accepted[slot]), now)
+        self._m_accept.observe(int(res.n_accepted[slot]))
+        if new:
+            self._m_tokens.inc(len(new))
+            if first:
+                self._m_ttft.observe(now - act.req.arrival_s)
         if self.stream is not None and (new or act.done):
             self.stream(act.req.rid, new, act.done)
 
     def _retire(self, slot: int, act: _Active, now: float) -> None:
         self.results[act.req.rid] = act.out
-        self.state = self.engine.release_slot(self.state, slot)
+        with self.tracer.span("retire", self.track, args={"rid": act.req.rid,
+                                                          "slot": slot}):
+            self.state = self.engine.release_slot(self.state, slot)
         self.slots[slot] = None
         self.stats.on_finish(act.req.rid, now, truncated=act.truncated)
+        self._m_finished.inc()
+        if act.truncated:
+            self._m_truncated.inc()
 
 
 class ServingRuntimeBase:
@@ -201,9 +258,13 @@ class ServingRuntimeBase:
     constructors.
     """
 
-    def _init_admission(self, queue: RequestQueue | None, clock) -> None:
+    def _init_admission(self, queue: RequestQueue | None, clock,
+                        tracer=None, metrics: MetricsRegistry | None = None) -> None:
         self.queue = queue if queue is not None else RequestQueue()
         self.clock = clock if clock is not None else WallClock()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_queue_depth = self.metrics.series("serving_queue_depth")
         self.results: dict[int, list] = {}
         # trace entries whose arrival time is still in the future; they join
         # the queue when the clock reaches them, so BOTH admission gates (the
@@ -303,13 +364,20 @@ class ServingRuntimeBase:
         routing decision per request; each admission reads the clock ONCE —
         the same timestamp gates the pop and stamps ``on_admit``."""
         while True:
+            route_span = self.tracer.begin("route", "router")
             target = self._route()
             if target is None:
+                route_span.end()
                 return
             now = self.clock.now()
-            req = self.queue.pop_ready(now)
+            with self.tracer.span("queue_pop", "router"):
+                req = self.queue.pop_ready(now)
             if req is None:
+                route_span.end()
                 return
+            route_span.set("replica", target)
+            route_span.set("rid", req.rid)
+            route_span.end()
             self.steppers[target].admit(req, now)
             self._seq += 1
             self._last_dispatch[target] = self._seq
@@ -331,7 +399,8 @@ class ServingRuntimeBase:
                 nxt = self._next_arrival()
                 if nxt is None:
                     break
-                self.clock.wait_until(nxt)  # idle: jump to the next arrival
+                with self.tracer.span("idle", "router"):
+                    self.clock.wait_until(nxt)  # idle: jump to the next arrival
                 continue
             # one global round: every busy stepper steps (concurrent across
             # disjoint device groups on real hardware), the clock ticks once,
@@ -340,6 +409,9 @@ class ServingRuntimeBase:
             self.clock.on_round()
             now = self.clock.now()
             depth = self.queue.depth(now)
+            self._m_queue_depth.append(now, depth)
+            self.tracer.counter("queue_depth", depth)
+            self.tracer.counter("occupied", self.occupied)
             for st, res in stepped:
                 st.stats.on_round(st.occupied, depth)
                 st.absorb_round(res, now)
@@ -358,12 +430,15 @@ class ContinuousBatchingRuntime(ServingRuntimeBase):
                  queue: RequestQueue | None = None,
                  clock=None,
                  stats: ServerStats | None = None,
-                 stream: Callable[[int, list, bool], None] | None = None):
-        self._init_admission(queue, clock)
+                 stream: Callable[[int, list, bool], None] | None = None,
+                 tracer=None,
+                 metrics: MetricsRegistry | None = None):
+        self._init_admission(queue, clock, tracer, metrics)
         self.stats = stats if stats is not None else ServerStats()
         self.stepper = EngineStepper(
             engine, tparams, dparams, n_slots,
-            stats=self.stats, stream=stream, results=self.results)
+            stats=self.stats, stream=stream, results=self.results,
+            tracer=self.tracer, metrics=self.metrics)
         self._init_fleet([self.stepper])
         self.engine, self.n_slots = engine, n_slots
 

@@ -110,11 +110,14 @@ class ServerStats:
         recs = self.finished_records()
         ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
         total_tokens = sum(r.n_tokens for r in recs)
-        wall = max(self.finished_s - self.started_s, 1e-9)
+        # started_s/finished_s default to 0.0; a window that was never
+        # stamped (or never advanced) has no meaningful width, so report nan
+        # instead of a 1e-9-floor throughput in the trillions
+        wall = self.finished_s - self.started_s
         return {
             "n_finished": len(recs),
             "total_tokens": total_tokens,
-            "throughput_tok_s": total_tokens / wall,
+            "throughput_tok_s": total_tokens / wall if wall > 0 else float("nan"),
             "ttft_p50_s": percentile(ttfts, 50),
             "ttft_p99_s": percentile(ttfts, 99),
             "mean_occupancy": self.mean_occupancy,
@@ -134,8 +137,10 @@ class ServerStats:
                 + ("  TRUNCATED(kv-budget)" if r.truncated else "")
             )
         s = self.summary()
+        tps = s["throughput_tok_s"]
+        tps_str = "-" if np.isnan(tps) else f"{tps:.1f}"
         lines.append(
-            f"aggregate: {s['n_finished']} finished, {s['throughput_tok_s']:.1f} tok/s, "
+            f"aggregate: {s['n_finished']} finished, {tps_str} tok/s, "
             f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
             f"occupancy {s['mean_occupancy']:.2f}, acceptance {s['mean_acceptance']:.2f}"
         )
@@ -157,17 +162,21 @@ def merge_summary(per_replica: list["ServerStats"]) -> dict:
     total_tokens = sum(r.n_tokens for r in recs)
     started = min((st.started_s for st in per_replica), default=0.0)
     finished = max((st.finished_s for st in per_replica), default=0.0)
-    wall = max(finished - started, 1e-9)
+    wall = finished - started
+    # fleet occupancy weighted by each replica's round count: a replica that
+    # sat idle (few rounds) must not drag the mean below what the busy
+    # replicas actually sustained
+    rounds = np.asarray([st.rounds for st in per_replica], np.float64)
+    occs = np.asarray([st.mean_occupancy for st in per_replica], np.float64)
     return {
         "n_replicas": len(per_replica),
         "n_finished": len(recs),
         "total_tokens": total_tokens,
-        "throughput_tok_s": total_tokens / wall,
+        "throughput_tok_s": total_tokens / wall if wall > 0 else float("nan"),
         "ttft_p50_s": percentile(ttfts, 50),
         "ttft_p99_s": percentile(ttfts, 99),
         "mean_occupancy": (
-            float(np.mean([st.mean_occupancy for st in per_replica]))
-            if per_replica else 0.0
+            float((occs * rounds).sum() / rounds.sum()) if rounds.sum() else 0.0
         ),
         "per_replica_occupancy": [st.mean_occupancy for st in per_replica],
         "per_replica_finished": [len(st.finished_records()) for st in per_replica],
@@ -199,8 +208,10 @@ def fleet_report(per_replica: list["ServerStats"]) -> str:
             f"replica {i}: {len(st.finished_records())} finished over {st.rounds} rounds, "
             f"occupancy {st.mean_occupancy:.2f}"
         )
+    tps = s["throughput_tok_s"]
+    tps_str = "-" if np.isnan(tps) else f"{tps:.1f}"
     lines.append(
-        f"fleet: {s['n_finished']} finished, {s['throughput_tok_s']:.1f} tok/s, "
+        f"fleet: {s['n_finished']} finished, {tps_str} tok/s, "
         f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
         f"acceptance {s['mean_acceptance']:.2f}"
     )

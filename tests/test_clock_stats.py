@@ -1,0 +1,126 @@
+"""Clock contract + stats aggregation seams the tracer depends on.
+
+``WallClock``/``VirtualClock`` are the serving timeline: ``reset()``
+re-zeros it, ``on_round()`` advances only the virtual flavor, and
+``wait_until()`` never moves time backwards.  ``percentile``/``summary``/
+``merge_summary`` must stay honest on empty or unstamped inputs (nan, not a
+1e-9-floor fantasy throughput), and fleet occupancy is weighted by rounds
+so an idle replica cannot skew the number.
+"""
+
+import time
+
+import numpy as np
+
+from repro.serving import ServerStats, VirtualClock, WallClock, merge_summary
+from repro.serving.stats import fleet_report, percentile
+
+
+# ---------------------------------------------------------------------------
+# clock contract
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_monotonic_and_reset():
+    c = WallClock()
+    t0 = c.now()
+    assert t0 >= 0.0
+    time.sleep(0.01)
+    assert c.now() > t0
+    c.reset()  # re-zeros the timeline (run() calls this once)
+    assert c.now() < t0 + 0.01
+
+
+def test_wallclock_on_round_is_passive():
+    """Real time advances by itself: on_round must not jump the clock."""
+    c = WallClock()
+    before = c.now()
+    c.on_round()
+    assert c.now() - before < 0.5  # no artificial jump, just elapsed time
+
+
+def test_wallclock_wait_until():
+    c = WallClock()
+    c.wait_until(c.now() - 5.0)  # the past: returns immediately, no sleep
+    target = c.now() + 0.02
+    c.wait_until(target)
+    assert c.now() >= target
+
+
+def test_virtualclock_contract():
+    c = VirtualClock(round_dt=0.25)
+    assert c.now() == 0.0
+    c.on_round()
+    c.on_round()
+    assert c.now() == 0.5
+    c.wait_until(2.0)  # idle jump forward
+    assert c.now() == 2.0
+    c.wait_until(1.0)  # never backwards
+    assert c.now() == 2.0
+    c.reset()
+    assert c.now() == 0.0
+    assert VirtualClock().round_dt == 1.0
+
+
+# ---------------------------------------------------------------------------
+# percentile / summary guards
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_empty_is_nan():
+    assert np.isnan(percentile([], 50))
+    assert percentile([3.0], 50) == 3.0
+    assert percentile([1.0, 3.0], 100) == 3.0
+
+
+def test_summary_unstamped_window_is_nan_not_nonsense():
+    """A missed reset()/run() leaves started_s == finished_s == 0.0; the old
+    1e-9 floor reported trillions of tok/s.  Now: nan, rendered '-'."""
+    st = ServerStats()
+    st.on_admit(0, 0, 0.0, 0.0)
+    st.on_tokens(0, 3, 2, 0.5)
+    st.on_finish(0, 0.5)
+    s = st.summary()
+    assert s["n_finished"] == 1 and s["total_tokens"] == 3
+    assert np.isnan(s["throughput_tok_s"])
+    rep = st.report()
+    assert " - tok/s" in rep and "nan tok/s" not in rep
+
+    st.started_s, st.finished_s = 0.0, 2.0  # stamped: finite again
+    assert st.summary()["throughput_tok_s"] == 1.5
+    assert "1.5 tok/s" in st.report()
+
+
+def test_merge_summary_unstamped_is_nan():
+    st = ServerStats()
+    s = merge_summary([st])
+    assert np.isnan(s["throughput_tok_s"])
+    assert " - tok/s" in fleet_report([st])
+
+
+# ---------------------------------------------------------------------------
+# fleet occupancy weighting
+# ---------------------------------------------------------------------------
+
+
+def _stats_with(rounds: int, occ: int) -> ServerStats:
+    st = ServerStats()
+    for _ in range(rounds):
+        st.on_round(occ, 0)
+    return st
+
+
+def test_merge_summary_occupancy_weighted_by_rounds():
+    """A replica that only spun 1 round must not average 50/50 against one
+    that sustained occupancy 2 for 9 rounds."""
+    busy, idle = _stats_with(9, 2), _stats_with(1, 0)
+    s = merge_summary([busy, idle])
+    assert s["mean_occupancy"] == (2 * 9 + 0 * 1) / 10  # 1.8, not 1.0
+    assert s["per_replica_occupancy"] == [2.0, 0.0]
+    assert s["per_replica_rounds"] == [9, 1]
+
+    # an all-idle fleet (zero rounds anywhere) reports 0.0, not nan
+    assert merge_summary([ServerStats(), ServerStats()])["mean_occupancy"] == 0.0
+    # equal rounds degenerate to the plain mean
+    s = merge_summary([_stats_with(4, 2), _stats_with(4, 1)])
+    assert s["mean_occupancy"] == 1.5
