@@ -1,0 +1,51 @@
+"""repro.analysis — JAX/Pallas-aware static analysis for the decode path.
+
+An AST-based lint pass (pure stdlib — it never imports jax, so CI can gate
+on it without a device backend) with rules grounded in this repo's real
+serving hazards:
+
+  RETRACE  recompile/concretization hazards inside jitted functions
+  AXIS     PartitionSpec/collective/constrain axis names vs. the axes
+           declared in ``sharding/rules.py`` + ``launch/mesh.py``
+  PALLAS   pallas_call BlockSpec/grid consistency
+  CLOCK    raw wall-clock reads outside the Clock abstraction
+  HOTSYNC  host syncs inside the hot decode round
+
+Run ``python -m repro.analysis src/``; see docs/static-analysis.md for the
+rule catalog, the ``# repro: disable=RULE`` suppression syntax and the
+baseline workflow.
+"""
+
+from repro.analysis import rules as _rules  # noqa: F401 — populate REGISTRY
+from repro.analysis.baseline import apply_baseline, load_baseline, write_baseline
+from repro.analysis.cli import main
+from repro.analysis.core import (
+    REGISTRY,
+    FileContext,
+    Finding,
+    Rule,
+    analyze_file,
+    analyze_paths,
+    register,
+)
+from repro.analysis.project import ProjectContext, build_project_context
+from repro.analysis.report import render_json, render_text, summarize
+
+__all__ = [
+    "REGISTRY",
+    "FileContext",
+    "Finding",
+    "ProjectContext",
+    "Rule",
+    "analyze_file",
+    "analyze_paths",
+    "apply_baseline",
+    "build_project_context",
+    "load_baseline",
+    "main",
+    "register",
+    "render_json",
+    "render_text",
+    "summarize",
+    "write_baseline",
+]

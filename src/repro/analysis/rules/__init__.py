@@ -1,0 +1,3 @@
+"""Rule modules; importing this package populates the registry."""
+
+from repro.analysis.rules import axis, clock, hotsync, pallas, retrace  # noqa: F401

@@ -1,0 +1,111 @@
+"""AXIS — axis-name literals cross-checked against the declared vocabulary.
+
+A mesh-axis typo in a ``PartitionSpec`` or collective does not error: JAX
+just replicates the dimension (or resolves against nothing), silently
+erasing the sharding the spec claims.  Every string literal used as an axis
+name is therefore checked against the axes the project actually declares
+(extracted from ``sharding/rules.py`` + ``launch/mesh.py`` by
+``repro.analysis.project``):
+
+  * ``PartitionSpec(...)`` / ``P(...)`` entries — mesh axes;
+  * collective ``axis_name`` arguments (``jax.lax.psum`` and friends,
+    ``axis_index``, ``all_gather``) — mesh axes;
+  * ``Mesh(devs, axes)`` / ``jax.make_mesh(shape, axes)`` tuples — mesh axes;
+  * ``constrain(x, ...)`` / ``spec_for`` logical-axis names — logical axes.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Finding, ImportMap, Rule, register
+
+_PSPEC_NAMES = frozenset({
+    "jax.sharding.PartitionSpec",
+    "jax.interpreters.pxla.PartitionSpec",
+})
+_COLLECTIVES = frozenset({
+    "jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+    "jax.lax.all_gather", "jax.lax.all_to_all", "jax.lax.ppermute",
+    "jax.lax.pshuffle", "jax.lax.axis_index", "jax.lax.psum_scatter",
+})
+_CONSTRAIN_NAMES = frozenset({
+    "repro.sharding.constrain", "repro.sharding.rules.constrain",
+})
+_MESH_CTORS = frozenset({
+    "jax.sharding.Mesh", "jax.make_mesh", "jax.experimental.mesh_utils.Mesh",
+})
+
+
+def _axis_strs(node: ast.AST):
+    """String constants in an axis argument (bare str or tuple/list of str)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value, node
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            yield from _axis_strs(elt)
+
+
+@register
+class AxisRule(Rule):
+    name = "AXIS"
+    description = ("PartitionSpec/collective/constrain axis names checked "
+                   "against sharding/rules.py + launch/mesh.py declarations")
+
+    def check(self, ctx: FileContext, project) -> list[Finding]:
+        imports = ImportMap(ctx.tree)
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = imports.resolve(node.func) or ""
+            if resolved in _PSPEC_NAMES or resolved.endswith(".PartitionSpec"):
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    findings.extend(self._check_axes(
+                        ctx, arg, project.mesh_axes, "mesh"))
+            elif resolved in _COLLECTIVES:
+                cands = node.args[1:2] + [kw.value for kw in node.keywords
+                                         if kw.arg in ("axis_name", "axis")]
+                for arg in cands:
+                    findings.extend(self._check_axes(
+                        ctx, arg, project.mesh_axes, "mesh"))
+            elif resolved in _MESH_CTORS or resolved.endswith(".Mesh"):
+                if len(node.args) >= 2:
+                    findings.extend(self._check_axes(
+                        ctx, node.args[1], project.mesh_axes, "mesh"))
+                for kw in node.keywords:
+                    if kw.arg in ("axis_names", "axes"):
+                        findings.extend(self._check_axes(
+                            ctx, kw.value, project.mesh_axes, "mesh"))
+            elif resolved in _CONSTRAIN_NAMES or (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id == "constrain"):
+                for arg in node.args[1:]:
+                    findings.extend(self._check_axes(
+                        ctx, arg, project.logical_axes, "logical"))
+            elif resolved.endswith("shard_map"):
+                # axis_name kwarg (specs' P(...) entries are caught above)
+                for kw in node.keywords:
+                    if kw.arg == "axis_name":
+                        findings.extend(self._check_axes(
+                            ctx, kw.value, project.mesh_axes, "mesh"))
+        return findings
+
+    def _check_axes(self, ctx, arg, declared, kind) -> list[Finding]:
+        out = []
+        for name, node in _axis_strs(arg):
+            if name not in declared:
+                close = _closest(name, declared)
+                hint = f" (did you mean {close!r}?)" if close else ""
+                out.append(ctx.finding(
+                    self.name, node,
+                    f"unknown {kind} axis {name!r} — declared {kind} axes: "
+                    f"{sorted(declared)}{hint}"))
+        return out
+
+
+def _closest(name: str, declared) -> str | None:
+    import difflib
+
+    m = difflib.get_close_matches(name, list(declared), n=1, cutoff=0.6)
+    return m[0] if m else None

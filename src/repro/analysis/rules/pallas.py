@@ -1,0 +1,215 @@
+"""PALLAS — BlockSpec/grid consistency for ``pl.pallas_call`` sites.
+
+Pallas index-map bugs do not fail loudly: a wrong-arity index_map raises at
+trace time in the best case, and a floor-division grid silently drops the
+remainder rows of an unpadded input in the worst.  For every
+``pallas_call`` whose grid is statically resolvable the rule checks:
+
+  * each BlockSpec ``index_map`` lambda takes exactly ``len(grid)`` args;
+  * an ``index_map`` returning a tuple literal returns one index per block
+    dimension;
+  * the kernel function takes ``len(in_specs) + n_outputs + n_scratch``
+    refs;
+  * the kernel body never writes an *input* ref (no matching output spec)
+    unless the call declares ``input_output_aliases``;
+  * grid components computed with ``//`` are guarded by a divisibility
+    check (an assert/raise mentioning ``%``, or ``pl.cdiv``) in the same
+    function — unpadded remainders must fail, not vanish.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Finding, ImportMap, Rule, qualname, register
+
+
+def _is_blockspec(node: ast.AST, imports: ImportMap) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    r = imports.resolve(node.func) or ""
+    return r.endswith("BlockSpec")
+
+
+def _lambda_arity(fn: ast.Lambda) -> int:
+    a = fn.args
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _enclosing_function(tree: ast.Module, call: ast.Call):
+    """Innermost FunctionDef containing ``call`` (by position)."""
+    best = None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (node.lineno <= call.lineno
+                    and call.lineno <= (node.end_lineno or node.lineno)):
+                if best is None or node.lineno >= best.lineno:
+                    best = node
+    return best
+
+
+def _resolve_grid_rank(call: ast.Call, fn) -> int | None:
+    grid = next((kw.value for kw in call.keywords if kw.arg == "grid"), None)
+    if grid is None:
+        return None
+    return _tuple_rank(grid, fn)
+
+
+def _tuple_rank(expr: ast.AST, fn) -> int | None:
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return 1
+    if isinstance(expr, ast.Name) and fn is not None:
+        # last assignment of that name before use, in the enclosing function
+        rank = None
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == expr.id):
+                rank = _tuple_rank(node.value, None)
+        return rank
+    return None
+
+
+def _grid_floordivs(call: ast.Call, fn):
+    """BinOp ``//`` nodes inside the grid expression (following one local
+    name assignment)."""
+    grid = next((kw.value for kw in call.keywords if kw.arg == "grid"), None)
+    if grid is None:
+        return
+    exprs = [grid]
+    if isinstance(grid, ast.Name) and fn is not None:
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == grid.id):
+                exprs.append(node.value)
+    for e in exprs:
+        for node in ast.walk(e):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv):
+                yield node
+
+
+def _has_divisibility_guard(fn) -> bool:
+    if fn is None:
+        return False
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assert, ast.If)):
+            for sub in ast.walk(node.test if isinstance(node, ast.If) else node):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    return True
+        if isinstance(node, ast.Call) and (qualname(node.func) or "").endswith("cdiv"):
+            return True
+    return False
+
+
+def _out_spec_list(call: ast.Call, imports):
+    for kw in call.keywords:
+        if kw.arg == "out_specs":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return list(kw.value.elts)
+            return [kw.value]
+    return []
+
+
+@register
+class PallasRule(Rule):
+    name = "PALLAS"
+    description = ("pallas_call BlockSpec/grid consistency: index_map arity, "
+                   "block rank, kernel ref count, input-ref writes, "
+                   "floor-div grids")
+
+    def check(self, ctx: FileContext, project) -> list[Finding]:
+        imports = ImportMap(ctx.tree)
+        local_defs = {
+            n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (imports.resolve(node.func) or "").endswith("pallas_call"):
+                continue
+            findings.extend(self._check_call(ctx, node, imports, local_defs))
+        return findings
+
+    def _check_call(self, ctx, call, imports, local_defs) -> list[Finding]:
+        out: list[Finding] = []
+        fn = _enclosing_function(ctx.tree, call)
+        grid_rank = _resolve_grid_rank(call, fn)
+
+        in_specs = []
+        for kw in call.keywords:
+            if kw.arg == "in_specs" and isinstance(kw.value, (ast.Tuple, ast.List)):
+                in_specs = list(kw.value.elts)
+        out_specs = _out_spec_list(call, imports)
+        scratch = []
+        for kw in call.keywords:
+            if kw.arg == "scratch_shapes" and isinstance(kw.value, (ast.Tuple, ast.List)):
+                scratch = list(kw.value.elts)
+        has_alias = any(kw.arg == "input_output_aliases" for kw in call.keywords)
+
+        # --- index_map arity / block rank per spec -------------------------
+        for spec in in_specs + out_specs:
+            if not _is_blockspec(spec, imports):
+                continue
+            shape = spec.args[0] if spec.args else None
+            imap = spec.args[1] if len(spec.args) > 1 else next(
+                (kw.value for kw in spec.keywords if kw.arg == "index_map"), None)
+            if isinstance(imap, ast.Lambda):
+                if grid_rank is not None and _lambda_arity(imap) != grid_rank:
+                    out.append(ctx.finding(
+                        self.name, imap,
+                        f"index_map takes {_lambda_arity(imap)} arg(s) but the "
+                        f"grid has rank {grid_rank}"))
+                if (isinstance(imap.body, (ast.Tuple, ast.List))
+                        and isinstance(shape, (ast.Tuple, ast.List))
+                        and len(imap.body.elts) != len(shape.elts)):
+                    out.append(ctx.finding(
+                        self.name, imap,
+                        f"index_map returns {len(imap.body.elts)} indices for "
+                        f"a rank-{len(shape.elts)} block shape"))
+
+        # --- kernel ref arity + input-ref writes ---------------------------
+        kernel = call.args[0] if call.args else None
+        kdef = None
+        if isinstance(kernel, ast.Name):
+            kdef = local_defs.get(kernel.id)
+        if kdef is not None and in_specs:
+            params = [a.arg for a in kdef.args.posonlyargs + kdef.args.args]
+            expected = len(in_specs) + len(out_specs) + len(scratch)
+            if out_specs and len(params) != expected:
+                out.append(ctx.finding(
+                    self.name, call,
+                    f"kernel `{kdef.name}` takes {len(params)} refs but the "
+                    f"call binds {len(in_specs)} input + {len(out_specs)} "
+                    f"output + {len(scratch)} scratch specs"))
+            if not has_alias:
+                input_names = set(params[:len(in_specs)])
+                for sub in ast.walk(kdef):
+                    tgt = None
+                    if isinstance(sub, ast.Assign):
+                        tgt = sub.targets[0]
+                    elif isinstance(sub, ast.AugAssign):
+                        tgt = sub.target
+                    if (isinstance(tgt, ast.Subscript)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id in input_names):
+                        out.append(ctx.finding(
+                            self.name, tgt,
+                            f"kernel `{kdef.name}` writes input ref "
+                            f"`{tgt.value.id}` which has no matching output "
+                            f"spec (declare input_output_aliases or add an "
+                            f"out_spec)"))
+
+        # --- floor-division grids ------------------------------------------
+        if not _has_divisibility_guard(fn):
+            for fd in _grid_floordivs(call, fn):
+                out.append(ctx.finding(
+                    self.name, fd,
+                    "floor-division grid silently drops the remainder of an "
+                    "unpadded input — guard divisibility (assert/raise on "
+                    "`%`) or use pl.cdiv"))
+        return out

@@ -1,0 +1,169 @@
+"""RETRACE — recompile / concretization hazards inside jitted functions.
+
+The decode round is one jitted program per (shape, static-arg) key; the
+hazards that silently re-trace it — or abort tracing outright — are:
+
+  * host ``np.*`` calls inside a jitted body: numpy executes at trace time,
+    constant-folding per trace (and raising on traced inputs), where
+    ``jnp.*`` was meant;
+  * Python scalar coercions (``int()``/``float()``/``bool()``/``.item()``/
+    ``.tolist()``) of traced values: ``ConcretizationTypeError`` at best, a
+    silent host sync at worst;
+  * ``static_argnums``/``static_argnames`` pointing at a parameter whose
+    default is a mutable literal: unhashable static args fail the jit cache
+    key on every call.
+
+A function counts as jitted when it is decorated with ``jax.jit`` (directly
+or through ``functools.partial``), wrapped by a ``jax.jit(...)`` call in the
+same file, or is a lambda passed inline to ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Finding, ImportMap, Rule, register
+
+_JIT_NAMES = frozenset({"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"})
+_COERCIONS = frozenset({"int", "float", "bool", "complex"})
+_SYNC_METHODS = frozenset({"item", "tolist"})
+
+
+def _is_jit_ref(node: ast.AST, imports: ImportMap) -> bool:
+    return imports.resolve(node) in _JIT_NAMES
+
+
+def _jit_call_static_kwargs(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnames"):
+            yield kw
+
+
+def _partial_jit(dec: ast.AST, imports: ImportMap):
+    """functools.partial(jax.jit, ...) decorator -> the partial Call."""
+    if (isinstance(dec, ast.Call) and imports.resolve(dec.func)
+            in ("functools.partial", "partial")
+            and dec.args and _is_jit_ref(dec.args[0], imports)):
+        return dec
+    return None
+
+
+class _JitCollector(ast.NodeVisitor):
+    """Find every function node that ends up wrapped by jax.jit, paired with
+    the jit call/decorator that wraps it (for static-arg inspection)."""
+
+    def __init__(self, tree: ast.Module, imports: ImportMap):
+        self.imports = imports
+        self.jitted: list[tuple[ast.AST, ast.Call | None]] = []
+        self._local_defs: dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._local_defs[node.name] = node
+        self.visit(tree)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        for dec in node.decorator_list:
+            if _is_jit_ref(dec, self.imports):
+                self.jitted.append((node, None))
+            elif isinstance(dec, ast.Call) and _is_jit_ref(dec.func, self.imports):
+                self.jitted.append((node, dec))
+            elif (p := _partial_jit(dec, self.imports)) is not None:
+                self.jitted.append((node, p))
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        if _is_jit_ref(node.func, self.imports) and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                self.jitted.append((target, node))
+            elif isinstance(target, ast.Name) and target.id in self._local_defs:
+                self.jitted.append((self._local_defs[target.id], node))
+        self.generic_visit(node)
+
+
+@register
+class RetraceRule(Rule):
+    name = "RETRACE"
+    description = ("np.* calls / Python scalar coercions / unhashable static "
+                   "args inside jitted functions")
+
+    def check(self, ctx: FileContext, project) -> list[Finding]:
+        imports = ImportMap(ctx.tree)
+        numpy_aliases = {local for local, canon in imports.names.items()
+                         if canon == "numpy"}
+        jitted = _JitCollector(ctx.tree, imports).jitted
+        findings: list[Finding] = []
+        seen_bodies: set[int] = set()
+        for fn, jit_call in jitted:
+            if jit_call is not None:
+                findings.extend(self._check_static_args(ctx, fn, jit_call))
+            if id(fn) in seen_bodies:  # e.g. jitted twice
+                continue
+            seen_bodies.add(id(fn))
+            findings.extend(self._check_body(ctx, fn, numpy_aliases))
+        return findings
+
+    def _check_static_args(self, ctx, fn, jit_call) -> list[Finding]:
+        out = []
+        params = []
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            a = fn.args
+            params = list(a.posonlyargs) + list(a.args)
+            defaults = list(a.defaults)
+            # align defaults to the trailing params
+            pad = [None] * (len(params) - len(defaults))
+            defaults = pad + defaults
+        for kw in _jit_call_static_kwargs(jit_call):
+            statics: set[int] = set()
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant):
+                    if isinstance(c.value, int):
+                        statics.add(c.value)
+                    elif isinstance(c.value, str):
+                        for i, p in enumerate(params):
+                            if p.arg == c.value:
+                                statics.add(i)
+            for i in statics:
+                if 0 <= i < len(params) and defaults[i] is not None and isinstance(
+                        defaults[i], (ast.List, ast.Dict, ast.Set)):
+                    out.append(ctx.finding(
+                        self.name, kw,
+                        f"static arg `{params[i].arg}` defaults to a mutable "
+                        f"(unhashable) literal — every call misses the jit "
+                        f"cache"))
+        return out
+
+    def _check_body(self, ctx, fn, numpy_aliases) -> list[Finding]:
+        out = []
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                # nested defs inside a jitted body are traced too — keep them
+                if isinstance(node, ast.Call):
+                    root = node.func
+                    while isinstance(root, ast.Attribute):
+                        root = root.value
+                    if (isinstance(root, ast.Name) and root.id in numpy_aliases
+                            and isinstance(node.func, ast.Attribute)):
+                        out.append(ctx.finding(
+                            self.name, node,
+                            "host numpy call inside a jitted function — "
+                            "runs at trace time (use jnp.*)"))
+                    elif (isinstance(node.func, ast.Name)
+                          and node.func.id in _COERCIONS and node.args
+                          and not isinstance(node.args[0], ast.Constant)):
+                        out.append(ctx.finding(
+                            self.name, node,
+                            f"`{node.func.id}()` of a traced value inside a "
+                            f"jitted function — concretization error or "
+                            f"silent retrace"))
+                    elif (isinstance(node.func, ast.Attribute)
+                          and node.func.attr in _SYNC_METHODS
+                          and not node.args):
+                        out.append(ctx.finding(
+                            self.name, node,
+                            f"`.{node.func.attr}()` inside a jitted function "
+                            f"forces concretization"))
+        return out

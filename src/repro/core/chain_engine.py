@@ -30,12 +30,12 @@ paper's latency regime; batch > 1 is served by replication.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.clock import monotonic
 from repro.sharding import use_mesh
 
 
@@ -109,7 +109,7 @@ class ChainSpecEngine:
         max_new = max_new or c.max_new
         B, P = prompt.shape
         assert B == 1, "chain engine is per-request (paper's latency regime)"
-        t0 = time.perf_counter()
+        t0 = monotonic()
 
         with use_mesh(self.mesh_target):
             tlogits, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
@@ -187,5 +187,5 @@ class ChainSpecEngine:
                     dcache = self._dcommit(dparams, dsnap, u, n)
                     pre_drafts = None
 
-        stats.wall_s = time.perf_counter() - t0
+        stats.wall_s = monotonic() - t0
         return [out[:max_new]], stats

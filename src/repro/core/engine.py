@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any
 
 import jax
@@ -26,6 +25,7 @@ import numpy as np
 
 from repro.core import kv as kvm
 from repro.core import tree as T
+from repro.obs.clock import monotonic
 from repro.obs.trace import NULL_TRACER
 from repro.sharding import use_mesh
 
@@ -332,9 +332,11 @@ class SpecEngine:
                     draft_steps += c.d
         # --- sync point: verified tokens cross groups (host-mediated) ------
         with obs.span("sync_emitted", trace_track):
-            emitted_h = np.asarray(jax.device_get(emitted))
-            n_emitted_h = np.asarray(jax.device_get(n_emitted))
-            n_acc_h = np.asarray(jax.device_get(n_acc))
+            # the round's ONE designated host sync: the verified-token
+            # transfer (paper's NCCL exchange) — everything else stays async
+            emitted_h = np.asarray(jax.device_get(emitted))  # repro: disable=HOTSYNC — designated sync point
+            n_emitted_h = np.asarray(jax.device_get(n_emitted))  # repro: disable=HOTSYNC — designated sync point
+            n_acc_h = np.asarray(jax.device_get(n_acc))  # repro: disable=HOTSYNC — designated sync point
         # --- re-root, fill, grow, select next batch (draft group) ----------
         with obs.span("reroot_grow", trace_track):
             with use_mesh(self.mesh_draft):
@@ -355,7 +357,7 @@ class SpecEngine:
         c = self.cfg
         max_new = max_new or c.max_new
         B, P = prompt.shape
-        t0 = time.perf_counter()
+        t0 = monotonic()
 
         state = self._prefill_state(tparams, dparams, prompt)
         out = [[] for _ in range(B)]
@@ -373,7 +375,7 @@ class SpecEngine:
                     _, done[b] = absorb_emitted(
                         out[b], res.emitted[b], res.n_emitted[b], max_new, c.eos_id)
 
-        stats.wall_s = time.perf_counter() - t0
+        stats.wall_s = monotonic() - t0
         return out, stats
 
     def profile(self, tparams, dparams, prompt, iters: int = 3):
@@ -409,14 +411,14 @@ class SpecEngine:
                 jax.block_until_ready(out[0])
 
         target_once()  # warm
-        t0 = time.perf_counter()
+        t0 = monotonic()
         for _ in range(iters):
             draft_once()
-        t_d = (time.perf_counter() - t0) / iters
-        t0 = time.perf_counter()
+        t_d = (monotonic() - t0) / iters
+        t0 = monotonic()
         for _ in range(iters):
             target_once()
-        t_t = (time.perf_counter() - t0) / iters
+        t_t = (monotonic() - t0) / iters
         return ProfileResult(t_draft_s=t_d, t_target_s=t_t)
 
     def _bypass(self, plan):

@@ -14,10 +14,11 @@ finish nearly simultaneously.  Both are reproduced here:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Sequence
 
 import numpy as np
+
+from repro.obs.clock import monotonic
 
 
 @dataclasses.dataclass
@@ -33,10 +34,10 @@ class ProfileResult:
 def _time_fn(fn: Callable[[], None], iters: int = 5, warmup: int = 2) -> float:
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    t0 = monotonic()
     for _ in range(iters):
         fn()
-    return (time.perf_counter() - t0) / iters
+    return (monotonic() - t0) / iters
 
 
 def profile_times(draft_step: Callable[[], None], target_step: Callable[[], None],

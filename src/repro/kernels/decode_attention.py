@@ -80,6 +80,11 @@ def decode_attention_pallas(q_r, k, v, length, *, scale: float, block_k: int, in
     """
     B, hkv, g, hd = q_r.shape
     S = k.shape[1]
+    if S % block_k:
+        raise ValueError(
+            f"decode_attention: S={S} must be a multiple of block_k="
+            f"{block_k} — the floor-div grid would silently drop the "
+            f"remainder (pad via kernels.ops)")
     grid = (B, hkv, S // block_k)
 
     return pl.pallas_call(

@@ -48,6 +48,11 @@ def fused_swiglu_pallas(x, wg, wu, *, block_m: int, block_n: int, block_k: int, 
     """
     M, K = x.shape
     N = wg.shape[1]
+    if M % block_m or N % block_n or K % block_k:
+        raise ValueError(
+            f"fused_swiglu: shapes M={M}, N={N}, K={K} must be multiples of "
+            f"blocks ({block_m}, {block_n}, {block_k}) — the floor-div grid "
+            f"would silently drop the remainder (pad via kernels.ops)")
     grid = (M // block_m, N // block_n, K // block_k)
 
     return pl.pallas_call(

@@ -89,6 +89,11 @@ def tree_attention_pallas(q_r, k, v, mask, *, scale: float, block_k: int, interp
     B, hkv, gn, hd = q_r.shape
     S = k.shape[1]
     n = mask.shape[1]
+    if S % block_k or gn % n:
+        raise ValueError(
+            f"tree_attention: S={S} must be a multiple of block_k={block_k} "
+            f"and Gn={gn} of n={n} — the floor-div grid would silently drop "
+            f"the remainder (pad via kernels.ops)")
     g = gn // n
     grid = (B, hkv, S // block_k)
 

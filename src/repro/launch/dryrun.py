@@ -18,7 +18,6 @@ feed EXPERIMENTS.md §Dry-run / §Roofline.
 
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -29,6 +28,7 @@ from repro.launch.hlo_parse import analyze, compiled_cost
 from repro.launch.hlo_stats import model_flops_per_chip, roofline_terms_from_module
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import cell_specs, dryrun_config
+from repro.obs.clock import monotonic
 from repro.sharding import use_mesh
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
@@ -52,14 +52,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, flag_overrides: dict |
     )
     flags.update(flag_overrides or {})
 
-    t0 = time.time()
+    # monotonic, not time.time(): an NTP step mid-compile used to be able to
+    # produce negative lower/compile durations in the dry-run records
+    t0 = monotonic()
     with use_mesh(mesh), override_flags(**flags):
         step, args, meta = cell_specs(arch, shape_name, mesh)
         donate = {"train": (0, 1), "prefill": (), "decode": (1,)}[shape.kind]
         lowered = jax.jit(step, donate_argnums=donate).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = monotonic() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled_cost(compiled)

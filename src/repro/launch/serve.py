@@ -28,7 +28,6 @@ split carved once per replica.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -39,6 +38,7 @@ from repro.core.scheduler import candidate_depths, profile_times
 from repro.data import make_request_stream, make_request_trace
 from repro.launch.mesh import make_serving_mesh
 from repro.models.api import make_model
+from repro.obs.clock import monotonic
 
 
 def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="parallel",
@@ -120,9 +120,9 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
     )
     print(f"continuous: {accepted}/{len(trace)} requests accepted "
           f"({label}, Poisson rate {args.rate}/s, queue cap {args.queue_cap})")
-    t0 = time.perf_counter()
+    t0 = monotonic()
     results = rt.run()
-    wall = time.perf_counter() - t0
+    wall = monotonic() - t0
     print(rt.report() if isinstance(engines, list) else rt.stats.report())
     total = sum(len(v) for v in results.values())
     print(f"wall: {total} tokens in {wall:.1f}s ({total/wall:.1f} tok/s incl. compile); "
@@ -217,9 +217,9 @@ def main(argv=None):
 
     total_toks, total_s = 0, 0.0
     for i, prompt in enumerate(make_request_stream(cfgT.vocab_size, args.prompt_len, 1, args.requests)):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         out, stats = eng.generate(tp, dp, prompt)
-        dt = time.perf_counter() - t0
+        dt = monotonic() - t0
         total_toks += len(out[0])
         total_s += dt
         print(f"req {i}: {len(out[0])} tokens in {dt:.2f}s "

@@ -12,7 +12,6 @@ faults, loss logging.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +23,7 @@ from repro.data import DataConfig, SyntheticLMDataset
 from repro.flags import override_flags
 from repro.launch.steps import make_train_step
 from repro.models.api import make_model
+from repro.obs.clock import monotonic
 from repro.optim import adamw_init
 from repro.runtime import FaultConfig, retry_step
 from repro.sharding import use_mesh
@@ -67,7 +67,7 @@ def main(argv=None):
                 print(f"resumed from step {s}")
 
         losses = []
-        t0 = time.perf_counter()
+        t0 = monotonic()
         for step in range(start, args.steps):
             host = ds.batch(step)
             feed = {"tokens": jnp.asarray(host["tokens"])}
@@ -84,7 +84,7 @@ def main(argv=None):
             params, opt, loss = retry_step(one, FaultConfig())
             losses.append(float(loss))
             if step % args.log_every == 0 or step == args.steps - 1:
-                dt = time.perf_counter() - t0
+                dt = monotonic() - t0
                 print(f"step {step:5d} loss {losses[-1]:.4f} ({dt:.1f}s)", flush=True)
             if cm and step and step % args.ckpt_every == 0:
                 cm.save(step, (params, opt))

@@ -1,0 +1,42 @@
+"""The sanctioned monotonic clock — every raw wall-clock read lives here.
+
+Timing in this codebase flows through one of two doors: the *injectable*
+clocks (``repro.serving.runtime.WallClock`` / ``VirtualClock``) for anything
+on the serving timeline, and ``monotonic()`` below for one-off stopwatch
+measurements (generate() wall time, profile passes, compile timing).  The
+static-analysis CLOCK rule (docs/static-analysis.md) bans ``time.time`` /
+``time.perf_counter`` / friends everywhere else, so VirtualClock benchmarks
+stay deterministic and no non-monotonic ``time.time()`` can sneak into a
+latency column again (launch/dryrun.py used to do exactly that).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def monotonic() -> float:
+    """Monotonic fractional seconds; the process-wide stopwatch timebase."""
+    # the single sanctioned raw read the CLOCK rule allows
+    return time.perf_counter()  # repro: disable=CLOCK — this IS the abstraction
+
+
+class Stopwatch:
+    """Tiny elapsed-time helper for the launch/benchmark drivers::
+
+        sw = Stopwatch()
+        ...work...
+        dt = sw.lap()      # seconds since construction or the last lap
+        total = sw.total() # seconds since construction
+    """
+
+    def __init__(self):
+        self._t0 = self._last = monotonic()
+
+    def lap(self) -> float:
+        now = monotonic()
+        dt, self._last = now - self._last, now
+        return dt
+
+    def total(self) -> float:
+        return monotonic() - self._t0

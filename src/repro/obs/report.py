@@ -68,21 +68,26 @@ def phase_breakdown(tracer) -> dict:
         if r.dur > 0:
             coverages.append(covered / r.dur)
 
+    # zero rounds (empty trace) must read as "unknown", not "instantaneous":
+    # a 0.0 mean_round_s or coverage from a dead tracer would sail straight
+    # through dashboards and the CI coverage gate, so every ratio whose
+    # denominator is empty is nan-marked instead
+    nan = float("nan")
     out = {
         "n_rounds": len(rounds),
         "round_total_s": round_total,
-        "mean_round_s": round_total / len(rounds) if rounds else 0.0,
+        "mean_round_s": round_total / len(rounds) if rounds else nan,
         "phase_s": phase_s,
         "phase_frac": {
-            k: (v / round_total if round_total else 0.0) for k, v in phase_s.items()
+            k: (v / round_total if round_total else nan) for k, v in phase_s.items()
         },
-        "coverage_mean": sum(coverages) / len(coverages) if coverages else 0.0,
-        "coverage_min": min(coverages) if coverages else 0.0,
+        "coverage_mean": sum(coverages) / len(coverages) if coverages else nan,
+        "coverage_min": min(coverages) if coverages else nan,
     }
     for group, members in PHASE_GROUPS.items():
         tot = sum(phase_s[m] for m in members)
         out[f"{group}_s"] = tot
-        out[f"{group}_frac"] = tot / round_total if round_total else 0.0
+        out[f"{group}_frac"] = tot / round_total if round_total else nan
     return out
 
 

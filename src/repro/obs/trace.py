@@ -24,7 +24,7 @@ bound.  Export: ``to_chrome()`` emits the Chrome/Perfetto ``traceEvents``
 JSON (open in ``ui.perfetto.dev`` or ``chrome://tracing``); ``write(path)``
 picks Chrome JSON or span-per-line JSONL from the file extension.
 
-Timestamps are ``time.perf_counter()`` (monotonic, fractional seconds)
+Timestamps are ``repro.obs.clock.monotonic()`` (fractional seconds)
 relative to tracer construction; the clock is injectable for deterministic
 tests.
 """
@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import collections
 import json
-import time
+
+from repro.obs.clock import monotonic
 
 
 class _NoopSpan:
@@ -99,7 +100,7 @@ class Tracer:
         self.enabled = enabled
         self.capacity = capacity
         self.dropped = 0
-        self._clock = clock if clock is not None else time.perf_counter
+        self._clock = clock if clock is not None else monotonic
         self._epoch = self._clock()
         self._spans: collections.deque[Span] = collections.deque(maxlen=capacity)
         self._instants: collections.deque = collections.deque(maxlen=capacity)

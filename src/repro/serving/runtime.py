@@ -36,6 +36,7 @@ import time
 from typing import Callable
 
 from repro.core.engine import absorb_emitted
+from repro.obs.clock import monotonic
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NOOP_SPAN, NULL_TRACER
 from repro.serving.queue import Request, RequestQueue
@@ -49,15 +50,15 @@ TTFT_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0)
 
 class WallClock:
     def __init__(self):
-        self._t0 = time.perf_counter()
+        self._t0 = monotonic()
 
     def now(self) -> float:
-        return time.perf_counter() - self._t0
+        return monotonic() - self._t0
 
     def reset(self) -> None:
         """Re-zero the serving timeline (run() calls this so construction-time
         jit compiles don't consume the trace's arrival schedule)."""
-        self._t0 = time.perf_counter()
+        self._t0 = monotonic()
 
     def on_round(self) -> None:  # real time advances by itself
         pass

@@ -1,0 +1,20 @@
+"""AXIS bad fixture: typo'd axis names in every checked position."""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def specs():
+    return P("modle", None), P(("data", "pdo"))
+
+
+def collective(x):
+    return jax.lax.psum(x, "mdoel")
+
+
+def mesh(devs):
+    return jax.sharding.Mesh(devs, ("data", "modell"))
+
+
+def logical(constrain, x):
+    return constrain(x, "batch", "embedd")

@@ -1,0 +1,20 @@
+"""AXIS good fixture: only declared mesh/logical axis names."""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def specs():
+    return P("model", None), P(("data", "model"))
+
+
+def collective(x):
+    return jax.lax.psum(x, "model"), jax.lax.all_gather(x, "data")
+
+
+def mesh(devs):
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def logical(constrain, x):
+    return constrain(x, "batch", "embed")

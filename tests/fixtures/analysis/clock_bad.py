@@ -1,0 +1,15 @@
+"""CLOCK bad fixture: raw reads as calls, via alias, and as a reference."""
+
+import time
+from time import perf_counter as pc
+
+
+def stamp():
+    return time.time()
+
+
+def lap():
+    return pc()
+
+
+DEFAULT_CLOCK = time.perf_counter  # passing the reference is the same bypass

@@ -1,0 +1,11 @@
+"""CLOCK good fixture: sleeping is allowed, timestamps come from a clock."""
+
+import time
+
+
+def nap(seconds):
+    time.sleep(seconds)  # spends time, does not read it
+
+
+def stamp(clock):
+    return clock()  # injected Clock — the sanctioned path

@@ -1,0 +1,13 @@
+"""HOTSYNC bad fixture: stray syncs inside a hot-scope round method."""
+
+import jax
+import jax.numpy as jnp
+
+
+class ToyServingRuntime:
+    def run(self, x):
+        out = jax.device_get(x)  # stray host sync in the round loop
+        x.block_until_ready()  # stalls async dispatch
+        if jnp.any(x > 0):  # implicit __bool__ — a blocking transfer
+            return out
+        return None

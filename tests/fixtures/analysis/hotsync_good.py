@@ -1,0 +1,13 @@
+"""HOTSYNC good fixture: designated sync suppressed, cold paths ignored."""
+
+import jax
+import numpy as np
+
+
+class ToyServingRuntime:
+    def run(self, x):
+        emitted = np.asarray(jax.device_get(x))  # repro: disable=HOTSYNC — the round's one designated sync point
+        return emitted
+
+    def report(self, x):
+        return jax.device_get(x)  # cold path: `report` is not a hot scope

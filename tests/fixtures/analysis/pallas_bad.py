@@ -1,0 +1,21 @@
+"""PALLAS bad fixture: index_map arity, block rank, input write, bare //."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    x_ref[...] = o_ref[...] * 2.0  # writes an INPUT ref, no alias declared
+    o_ref[...] = x_ref[...]
+
+
+def bad_call(x, block_m):
+    m = x.shape[0]
+    grid = (m // block_m,)  # unguarded floor division
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i, j: (i,))],  # 2 args, rank-1 grid
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i, 0)),  # 2 idx, rank-1 block
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,22 @@
+"""PALLAS good fixture: guarded grid, matching arities, no input writes."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def good_call(x, block_m):
+    m = x.shape[0]
+    if m % block_m:
+        raise ValueError(f"M={m} must be a multiple of block_m={block_m}")
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

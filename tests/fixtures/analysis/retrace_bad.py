@@ -1,0 +1,28 @@
+"""RETRACE bad fixture: one instance of every hazard class the rule names.
+
+Never imported — scanned by tests/test_analysis.py only.
+"""
+
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def decorated(x):
+    return np.sum(x)  # host numpy inside the traced body
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def partial_jitted(x, opts=[]):  # mutable default on a static arg
+    return x
+
+
+def local(x):
+    return float(x) + x.item()  # scalar coercion + concretizing method
+
+
+wrapped = jax.jit(local)
+
+inline = jax.jit(lambda x: int(x))

@@ -1,0 +1,25 @@
+"""RETRACE good fixture: jnp inside jit, numpy outside, hashable statics."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decorated(x):
+    b = x.shape[0]  # shapes are python ints at trace time — fine
+    return jnp.sum(x.reshape(b, -1), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def partial_jitted(x, n=4):  # hashable static default
+    return x * n
+
+
+def host_side(x):
+    return np.sum(x)  # numpy OUTSIDE any jitted function is fine
+
+
+wrapped = jax.jit(decorated)

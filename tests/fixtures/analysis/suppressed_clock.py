@@ -1,0 +1,8 @@
+"""Suppression fixture: both comment placements silence the finding."""
+
+import time
+
+T0 = time.time()  # repro: disable=CLOCK — fixture: same-line form
+
+# repro: disable=CLOCK — fixture: standalone line directly above
+T1 = time.time()

@@ -1,0 +1,3 @@
+"""Unused-suppression fixture: the escape matches nothing and is reported."""
+
+X = 1  # repro: disable=CLOCK — nothing on this line violates CLOCK

@@ -1,0 +1,247 @@
+"""repro.analysis: the static-analysis pass that guards the hot decode round.
+
+Contracts under test:
+  * each rule trips on its bad fixture (and ONLY its rule trips) and stays
+    silent on the matching good fixture;
+  * suppressions silence findings in both comment placements, and an unused
+    suppression is itself a finding;
+  * the baseline round-trips, deleting an entry resurfaces its finding, and
+    an entry matching nothing is stale (fails the run);
+  * the shipped src/ tree is clean modulo the checked-in baseline, and
+    removing any escape (suppression comment or baseline entry) flips the
+    exit code — the self-clean acceptance gate.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from repro.analysis import rules as _rules  # noqa: F401 — populates REGISTRY
+from repro.analysis.baseline import apply_baseline, load_baseline, write_baseline
+from repro.analysis.cli import main
+from repro.analysis.core import REGISTRY, analyze_file
+from repro.analysis.project import ProjectContext, build_project_context
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "fixtures", "analysis")
+REPO = os.path.dirname(HERE)
+SRC = os.path.join(REPO, "src")
+BASELINE = os.path.join(REPO, "analysis-baseline.json")
+
+# discovered by fixture naming convention: <rule>_bad.py / <rule>_good.py,
+# so adding a rule + its fixtures auto-enrolls it in the contract tests
+RULES = tuple(sorted(
+    f[:-len("_bad.py")] for f in os.listdir(FIXTURES) if f.endswith("_bad.py")))
+
+
+def _scan(name, project=None):
+    return analyze_file(os.path.join(FIXTURES, name), FIXTURES,
+                        project or ProjectContext())
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_five_rules():
+    assert {"RETRACE", "AXIS", "PALLAS", "CLOCK", "HOTSYNC"} <= set(REGISTRY)
+    assert {r.upper() for r in RULES} <= set(REGISTRY)  # fixture <-> rule pairing
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_fixture_trips_exactly_its_rule(rule):
+    findings = _scan(f"{rule}_bad.py")
+    assert findings, f"{rule}_bad.py produced no findings"
+    assert {f.rule for f in findings} == {rule.upper()}
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_good_fixture_is_clean(rule):
+    assert _scan(f"{rule}_good.py") == []
+
+
+def test_retrace_covers_every_hazard_class():
+    msgs = " | ".join(f.message for f in _scan("retrace_bad.py"))
+    assert "host numpy call" in msgs
+    assert "`float()`" in msgs and "`int()`" in msgs  # decorated + lambda
+    assert "`.item()`" in msgs
+    assert "mutable" in msgs  # static arg with unhashable default
+
+
+def test_axis_suggests_the_closest_declared_name():
+    findings = _scan("axis_bad.py")
+    assert len(findings) == 5
+    hints = [f.message for f in findings if "did you mean" in f.message]
+    assert any("'model'" in h for h in hints)
+    assert any("'embed'" in h for h in hints)
+
+
+def test_pallas_covers_every_consistency_check():
+    msgs = " | ".join(f.message for f in _scan("pallas_bad.py"))
+    assert "index_map takes 2 arg(s)" in msgs  # vs rank-1 grid
+    assert "returns 2 indices" in msgs  # vs rank-1 block shape
+    assert "writes input ref" in msgs
+    assert "floor-division grid" in msgs
+
+
+def test_hotsync_covers_every_sync_shape():
+    msgs = " | ".join(f.message for f in _scan("hotsync_bad.py"))
+    assert "jax.device_get" in msgs
+    assert "block_until_ready" in msgs
+    assert "__bool__" in msgs
+
+
+def test_clock_flags_references_not_just_calls():
+    findings = _scan("clock_bad.py")
+    assert len(findings) == 3  # time.time(), aliased pc(), bare reference
+    assert any("time.perf_counter" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_both_placements_silence_the_finding():
+    assert _scan("suppressed_clock.py") == []
+
+
+def test_unused_suppression_is_reported():
+    findings = _scan("unused_suppress.py")
+    assert [f.rule for f in findings] == ["UNUSED-SUPPRESS"]
+
+
+def test_parse_failure_is_a_finding_not_a_crash(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def broken(:\n")
+    findings = analyze_file(str(p), str(tmp_path), ProjectContext())
+    assert [f.rule for f in findings] == ["PARSE"]
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + baseline
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_survives_line_drift(tmp_path):
+    src = open(os.path.join(FIXTURES, "clock_bad.py"), encoding="utf-8").read()
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    a.mkdir(), b.mkdir()
+    (a / "m.py").write_text(src)
+    (b / "m.py").write_text("# padding\n# padding\n\n" + src)
+    fa = analyze_file(str(a / "m.py"), str(a), ProjectContext())
+    fb = analyze_file(str(b / "m.py"), str(b), ProjectContext())
+    assert [f.fingerprint for f in fa] == [f.fingerprint for f in fb]
+    assert [f.line for f in fa] != [f.line for f in fb]  # drift really happened
+
+
+def test_baseline_roundtrip_delete_and_stale(tmp_path):
+    findings = _scan("clock_bad.py")
+    path = str(tmp_path / "bl.json")
+    assert write_baseline(path, findings, "fixture grandfather") == len(findings)
+    baseline = load_baseline(path)
+
+    flagged, stale = apply_baseline(findings, baseline)
+    assert stale == [] and all(f.baselined for f in flagged)
+
+    # deleting one entry resurfaces exactly that finding as new
+    victim = findings[0].fingerprint
+    del baseline[victim]
+    flagged, stale = apply_baseline(findings, baseline)
+    assert stale == []
+    assert [f.fingerprint for f in flagged if not f.baselined] == [victim]
+
+    # an entry matching no finding is stale — it must fail the run
+    baseline["deadbeefdeadbeef#0"] = "covered code is gone"
+    _, stale = apply_baseline(findings, baseline)
+    assert stale == ["deadbeefdeadbeef#0"]
+
+
+# ---------------------------------------------------------------------------
+# project context: the axis vocabulary really comes from the repo
+# ---------------------------------------------------------------------------
+
+
+def test_project_context_extracts_repo_axes():
+    ctx = build_project_context([SRC])
+    assert ctx.rules_file and ctx.rules_file.endswith("rules.py")
+    assert ctx.mesh_file and ctx.mesh_file.endswith("mesh.py")
+    assert {"model", "data"} <= ctx.mesh_axes
+    assert {"batch", "embed"} <= ctx.logical_axes
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, JSON report, the self-clean gate over src/
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = os.path.join(FIXTURES, "clock_good.py")
+    bad = os.path.join(FIXTURES, "clock_bad.py")
+    assert main([good, "--no-baseline"]) == 0
+    assert main([bad, "--no-baseline"]) == 1
+    assert main([str(tmp_path / "empty-nothing-here"), "--no-baseline"]) == 2
+    assert main([bad, "--rules", "NOSUCHRULE"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_rule_subset(capsys):
+    bad = os.path.join(FIXTURES, "clock_bad.py")
+    assert main([bad, "--no-baseline", "--rules", "AXIS"]) == 0
+    assert main([bad, "--no-baseline", "--rules", "CLOCK,AXIS"]) == 1
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule.upper() in out
+
+
+def test_cli_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    rc = main([os.path.join(FIXTURES, "axis_bad.py"), "--no-baseline",
+               "--format", "json", "--output", str(out)])
+    assert rc == 1
+    doc = json.loads(out.read_text())
+    assert doc["summary"]["new"] == len(doc["findings"]) == 5
+    assert all(f["rule"] == "AXIS" for f in doc["findings"])
+    assert doc["summary"]["by_rule"] == {"AXIS": 5}
+    assert set(doc["rules"]) >= {r.upper() for r in RULES}
+
+
+def test_src_is_clean_modulo_baseline(capsys):
+    assert main([SRC, "--baseline", BASELINE]) == 0
+    out = capsys.readouterr().out
+    assert "-> clean" in out and "[baselined]" in out
+
+
+def test_deleting_a_baseline_entry_fails_the_run(tmp_path, capsys):
+    baseline = load_baseline(BASELINE)
+    assert baseline, "shipped baseline must not be empty for this gate"
+    victim = sorted(baseline)[0]
+    pruned = {k: v for k, v in baseline.items() if k != victim}
+    path = tmp_path / "pruned.json"
+    path.write_text(json.dumps({"version": 1, "entries": pruned}))
+    assert main([SRC, "--baseline", str(path)]) == 1
+    capsys.readouterr()
+
+
+def test_removing_a_suppression_resurfaces_the_finding(tmp_path):
+    engine = os.path.join(SRC, "repro", "core", "engine.py")
+    text = open(engine, encoding="utf-8").read()
+    assert "# repro: disable=HOTSYNC" in text
+    project = build_project_context([SRC])
+    clean = analyze_file(engine, SRC, project)
+    assert not [f for f in clean if f.rule == "HOTSYNC"]
+
+    stripped = re.sub(r"\s*# repro: disable=HOTSYNC[^\n]*", "", text, count=1)
+    p = tmp_path / "engine.py"
+    p.write_text(stripped)
+    findings = analyze_file(str(p), str(tmp_path), project)
+    assert [f for f in findings if f.rule == "HOTSYNC"]

@@ -30,6 +30,7 @@ from repro.serving import (
     Request,
     ShardedServingRuntime,
     VirtualClock,
+    merge_summary,
 )
 
 
@@ -286,10 +287,28 @@ def test_phase_breakdown_ignores_nested_and_foreign_spans():
     assert bd["phase_s"]["draft_expand"] == pytest.approx(0.4)
 
 
-def test_phase_breakdown_empty():
+def test_phase_breakdown_empty_is_nan_marked():
+    """Zero rounds must read as 'unknown' (nan), never as an instantaneous
+    round with perfect-zero coverage — a dead tracer that reported 0.0s
+    rounds would slide straight past the CI coverage gate."""
     bd = phase_breakdown(Tracer())
-    assert bd["n_rounds"] == 0 and bd["coverage_mean"] == 0.0
+    assert bd["n_rounds"] == 0 and bd["round_total_s"] == 0.0
+    assert np.isnan(bd["mean_round_s"])
+    assert np.isnan(bd["coverage_mean"]) and np.isnan(bd["coverage_min"])
+    assert all(np.isnan(v) for v in bd["phase_frac"].values())
+    for group in ("draft", "verify", "absorb"):
+        assert bd[f"{group}_s"] == 0.0 and np.isnan(bd[f"{group}_frac"])
     assert breakdown_report(bd) == "phase breakdown: no rounds traced"
+
+
+def test_merge_summary_no_replicas_is_nan_marked():
+    """merge_summary([]) — a fleet that never started — must not divide by
+    zero and must nan-mark the rate fields rather than report 0 tok/s."""
+    s = merge_summary([])
+    assert s["n_replicas"] == 0 and s["n_finished"] == 0
+    assert np.isnan(s["throughput_tok_s"])
+    assert np.isnan(s["ttft_p50_s"]) and np.isnan(s["ttft_p99_s"])
+    assert s["mean_occupancy"] == 0.0 and s["mean_acceptance"] == 0.0
 
 
 # ---------------------------------------------------------------------------
