@@ -59,8 +59,9 @@ print()
 print(runtime.stats.report())
 
 # the runtime's outputs are byte-identical to solo generate() runs
+session = engine.session(tp, dp)  # bound round API: params live on the session
 for r in trace:
-    solo, _ = engine.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+    solo, _ = session.generate(r.prompt.reshape(1, -1), max_new=r.max_new)
     assert results[r.rid] == solo[0]
 print(f"\nall {len(results)} outputs byte-identical to solo generate() — continuous "
       f"batching changed the schedule, not the tokens")

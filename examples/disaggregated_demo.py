@@ -68,6 +68,7 @@ sm = make_model(scfg)
 sp = sm.init(jax.random.PRNGKey(0))
 sp["lm_head"].value = sp["lm_head"].value * 4.0
 eng = ChainSpecEngine(sm, sm, ChainConfig(k=4, mode="parallel", max_new=16), 128, 128)
-out, st = eng.generate(sp, sp, (np.arange(1, 9, dtype=np.int32) % scfg.vocab_size).reshape(1, 8))
+out, st = eng.session(sp, sp).generate(
+    (np.arange(1, 9, dtype=np.int32) % scfg.vocab_size).reshape(1, 8))
 print(f"emitted {len(out[0])} tokens in {st.rounds} rounds "
       f"(compression {st.compression_ratio:.2f}, {st.reused_chains} chains reused)")

@@ -29,7 +29,8 @@ engine = SpecEngine(
 )
 
 prompt = (np.arange(1, 9, dtype=np.int32) % cfg.vocab_size).reshape(1, 8)
-out, stats = engine.generate(params, params, prompt)
+session = engine.session(params, params)  # bound round API (params + state)
+out, stats = session.generate(prompt)
 print("speculative:", out[0])
 print(f"rounds={stats.rounds} compression={stats.compression_ratio:.2f} "
       f"tokens/round={stats.tokens_per_round:.2f}")

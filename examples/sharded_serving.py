@@ -57,8 +57,9 @@ print(runtime.report())
 print()
 
 # sharding changed the schedule, never the tokens
+session = engine.session(tp, dp)  # bound round API: params live on the session
 for r in trace:
-    solo, _ = engine.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+    solo, _ = session.generate(r.prompt.reshape(1, -1), max_new=r.max_new)
     assert results[r.rid] == solo[0]
 used = sorted({runtime.replica_of(r.rid) for r in trace})
 print(f"all {len(results)} outputs byte-identical to solo generate(); "

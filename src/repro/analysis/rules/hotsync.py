@@ -32,6 +32,8 @@ HOT_SCOPES = (
     ("SpecEngine", "generate"),
     ("ChainSpecEngine", "step"),
     ("ChainSpecEngine", "generate"),
+    ("EngineSession", "*"),      # the bound round API: every phase method is hot
+    ("ChainSession", "*"),
     ("EngineStepper", "*"),
     ("ServingRuntimeBase", "run"),
     ("*Runtime", "run"),

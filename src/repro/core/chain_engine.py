@@ -30,12 +30,15 @@ paper's latency regime; batch > 1 is served by replication.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.obs.clock import monotonic
+from repro.obs.trace import NULL_TRACER
 from repro.sharding import use_mesh
 
 
@@ -103,58 +106,100 @@ class ChainSpecEngine:
         self._tprefill = jax.jit(lambda p, t, S: target.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
 
     # ------------------------------------------------------------------
+    def session(self, tparams, dparams, *, tracer=None, track="chain") -> "ChainSession":
+        """Bind params (+ optional tracer) into a ChainSession — the round
+        API surface; mirrors ``SpecEngine.session``."""
+        return ChainSession(self, tparams, dparams,
+                            tracer=tracer or NULL_TRACER, track=track)
+
     def generate(self, tparams, dparams, prompt, max_new=None):
-        c = self.cfg
+        warnings.warn(
+            "ChainSpecEngine.generate(tparams, dparams, prompt) is deprecated; "
+            "use ChainSpecEngine.session(tparams, dparams).generate(prompt)",
+            DeprecationWarning, stacklevel=2)
+        return self.session(tparams, dparams).generate(prompt, max_new=max_new)
+
+
+@dataclasses.dataclass
+class ChainSession:
+    """Params bound to a ChainSpecEngine — the chain-mode analogue of
+    ``EngineSession``.  ``generate`` emits the same phase-span vocabulary as
+    the tree engine (``verify_dispatch`` held open across the concurrent
+    next-chain speculation, ``draft_lookahead``, ONE fused ``sync_emitted``
+    host transfer per round, ``reroot_grow`` for the state commit), so chain
+    rounds land in the same ``phase_breakdown`` and the same HOTSYNC budget:
+    one designated sync point per round."""
+
+    engine: ChainSpecEngine
+    tparams: Any
+    dparams: Any
+    tracer: Any = NULL_TRACER
+    track: str = "chain"
+
+    def generate(self, prompt, max_new=None):
+        eng = self.engine
+        tparams, dparams = self.tparams, self.dparams
+        c = eng.cfg
         k = c.k
         max_new = max_new or c.max_new
         B, P = prompt.shape
         assert B == 1, "chain engine is per-request (paper's latency regime)"
         t0 = monotonic()
 
-        with use_mesh(self.mesh_target):
-            tlogits, tcache = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
-        with use_mesh(self.mesh_draft):
-            _, dcache = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
+        with use_mesh(eng.mesh_target):
+            tlogits, tcache = eng._tprefill(tparams, jnp.asarray(prompt), eng.S_max_t)
+        with use_mesh(eng.mesh_draft):
+            _, dcache = eng._dprefill(dparams, jnp.asarray(prompt), eng.S_max_d)
 
         pending = jnp.argmax(tlogits[:, -1, :], -1).astype(jnp.int32)[:, None]  # [1,1]
         out = [int(pending[0, 0])]
         stats = ChainStats(emitted=1)
-        t_state = _has_state(self.target)
+        t_state = _has_state(eng.target)
         pre_drafts = None  # speculated next chain (parallel reuse)
         done = (c.eos_id >= 0 and out[0] == c.eos_id) or len(out) >= max_new
 
         while not done:
-            if (P + stats.emitted + 2 * k + 2) >= min(self.S_max_t, self.S_max_d):
+            if (P + stats.emitted + 2 * k + 2) >= min(eng.S_max_t, eng.S_max_d):
                 break
+            rspan = self.tracer.begin("round", self.track)
             dsnap = dcache  # pre-round draft state (functional: snapshot is free)
 
             # --- draft chain -------------------------------------------------
-            with use_mesh(self.mesh_draft):
-                if pre_drafts is not None:
-                    drafts, dfull_cache = pre_drafts
-                    stats.reused_chains += 1
-                else:
-                    drafts, _ = self._draft_chain(dparams, dcache, pending)
-                    dfull_cache = None
-                    stats.draft_chains += 1
-            u = jnp.concatenate([pending, drafts[:, : k - 1]], axis=1)  # [1,k]
+            with self.tracer.span("draft_expand", self.track):
+                with use_mesh(eng.mesh_draft):
+                    if pre_drafts is not None:
+                        drafts, dfull_cache = pre_drafts
+                        stats.reused_chains += 1
+                    else:
+                        drafts, _ = eng._draft_chain(dparams, dcache, pending)
+                        dfull_cache = None
+                        stats.draft_chains += 1
+                u = jnp.concatenate([pending, drafts[:, : k - 1]], axis=1)  # [1,k]
 
-            # --- target verification (dispatched async) ----------------------
-            with use_mesh(self.mesh_target):
-                argmax, tcache_rows = self._verify(tparams, tcache, u)
+            # --- target verification: the span stays open until the verified
+            # tokens land at the sync point — it IS the verify window the
+            # concurrent speculation below overlaps with
+            vspan = self.tracer.begin("verify_dispatch", self.track)
+            with use_mesh(eng.mesh_target):
+                argmax, tcache_rows = eng._verify(tparams, tcache, u)
 
             # --- concurrently: speculate the next chain ----------------------
             next_pre = None
             if c.mode == "parallel":
-                with use_mesh(self.mesh_draft):
-                    dfull = self._dcommit(dparams, dsnap, u, jnp.asarray(k))
-                    nxt_drafts, nxt_cache = self._draft_chain(dparams, dfull, drafts[:, k - 1:])
-                    next_pre = (nxt_drafts, None)
-                    stats.draft_chains += 1
+                with self.tracer.span("draft_lookahead", self.track):
+                    with use_mesh(eng.mesh_draft):
+                        dfull = eng._dcommit(dparams, dsnap, u, jnp.asarray(k))
+                        nxt_drafts, nxt_cache = eng._draft_chain(
+                            dparams, dfull, drafts[:, k - 1:])
+                        next_pre = (nxt_drafts, None)
+                        stats.draft_chains += 1
 
             # --- sync point ---------------------------------------------------
-            argmax_h = np.asarray(jax.device_get(argmax))[0]  # [k]
-            drafts_h = np.asarray(jax.device_get(drafts))[0]  # [k]
+            with self.tracer.span("sync_emitted", self.track):
+                argmax_h, drafts_h = jax.device_get((argmax, drafts))  # repro: disable=HOTSYNC — designated sync point: ONE fused transfer of the round's verdict
+            vspan.end()
+            argmax_h = np.asarray(argmax_h)[0]  # [k]
+            drafts_h = np.asarray(drafts_h)[0]  # [k]
             n_acc = 0
             while n_acc < k - 1 and drafts_h[n_acc] == argmax_h[n_acc]:
                 n_acc += 1
@@ -173,19 +218,21 @@ class ChainSpecEngine:
             pending = jnp.asarray([[int(argmax_h[n_emit - 1])]], jnp.int32)
 
             # --- commit accepted prefix ---------------------------------------
-            n = jnp.asarray(n_emit)
-            with use_mesh(self.mesh_target):
-                if t_state:
-                    tcache = self._tcommit(tparams, tcache, u, n)
-                else:  # attention-only: rows already written, just move len
-                    tcache = {**tcache_rows, "len": tcache_rows["len"] + n}
-            with use_mesh(self.mesh_draft):
-                if full and c.mode == "parallel":
-                    dcache = dfull  # chain fully accepted: snapshot+u == truth
-                    pre_drafts = (nxt_drafts, None)
-                else:
-                    dcache = self._dcommit(dparams, dsnap, u, n)
-                    pre_drafts = None
+            with self.tracer.span("reroot_grow", self.track):
+                n = jnp.asarray(n_emit)
+                with use_mesh(eng.mesh_target):
+                    if t_state:
+                        tcache = eng._tcommit(tparams, tcache, u, n)
+                    else:  # attention-only: rows already written, just move len
+                        tcache = {**tcache_rows, "len": tcache_rows["len"] + n}
+                with use_mesh(eng.mesh_draft):
+                    if full and c.mode == "parallel":
+                        dcache = dfull  # chain fully accepted: snapshot+u == truth
+                        pre_drafts = (nxt_drafts, None)
+                    else:
+                        dcache = eng._dcommit(dparams, dsnap, u, n)
+                        pre_drafts = None
+            rspan.end()
 
         stats.wall_s = monotonic() - t0
         return [out[:max_new]], stats

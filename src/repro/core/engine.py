@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -26,7 +27,7 @@ import numpy as np
 from repro.core import kv as kvm
 from repro.core import tree as T
 from repro.obs.clock import monotonic
-from repro.obs.trace import NULL_TRACER
+from repro.obs.trace import NOOP_SPAN, NULL_TRACER
 from repro.sharding import use_mesh
 
 
@@ -41,6 +42,7 @@ class SpecConfig:
     max_new: int = 64
     eos_id: int = -1  # -1: never stop early
     draft_bypass: bool = False  # straggler mitigation: verify root-only chain
+    async_rounds: bool = False  # pipeline rounds: draft N+1's tree while N verifies
 
 
 @dataclasses.dataclass
@@ -56,6 +58,8 @@ class SpecStats:
     wall_s: float = 0.0
     emitted_rows: np.ndarray | None = None  # i64[B] per-row emitted totals
     accepted_rows: np.ndarray | None = None  # i64[B] per-row accepted totals
+    spec_rounds: int = 0  # rounds run through the async lookahead path
+    spec_commits: int = 0  # of those, rounds whose lookahead tree was adopted
 
     def add_round(self, n_emitted, n_accepted):
         n_emitted = np.asarray(n_emitted, np.int64)
@@ -112,6 +116,28 @@ class StepResult:
     n_accepted: np.ndarray  # i32[B]
 
 
+@dataclasses.dataclass
+class RoundInFlight:
+    """One dispatched-but-unreconciled speculative round.
+
+    Created by ``EngineSession.dispatch_verify`` + ``draft_next_tree``,
+    consumed exactly once by ``EngineSession.reconcile``.  Everything here is
+    a device future except ``draft_steps``; nothing has crossed to the host
+    yet.  The owning session's ``state`` is consumed (its buffers donated)
+    while a round is in flight — the fresh state is reassembled from these
+    fields at reconcile time.
+    """
+
+    plan: Any  # BatchPlan actually submitted to verify (post-bypass)
+    tcache: Any  # verify-updated target cache (correct regardless of outcome)
+    verify: tuple  # (acc_pos, n_acc, bonus, emitted, n_emitted) device futures
+    snapshot: tuple | None = None  # (tr, dcache) post-expansion, pre-reroot
+    lookahead: tuple | None = None  # (tr, dcache, plan) drafted for round N+1
+    pred: tuple | None = None  # (acc_pos, n_acc, bonus) predicted outcome
+    draft_steps: int = 0
+    verify_span: Any = NOOP_SPAN  # open until the reconcile sync (verify window)
+
+
 def absorb_emitted(out: list, emitted_row, n_emitted: int, max_new: int, eos_id: int):
     """Append one row's verified tokens to ``out`` until EOS or ``max_new``.
 
@@ -138,6 +164,10 @@ class SpecEngine:
         self.mesh_target, self.mesh_draft = mesh_target, mesh_draft
         window = target.cfg.sliding_window
         c = cfg
+        if c.async_rounds and c.mode != "parallel":
+            raise ValueError(
+                f"async_rounds requires mode='parallel' (got mode={c.mode!r}): "
+                "the lookahead pipeline IS the parallel overlap")
 
         # ----- jitted draft-side steps ------------------------------------
         def expand(dparams, tr, dcache):
@@ -190,6 +220,11 @@ class SpecEngine:
         self._expand = jax.jit(expand, donate_argnums=(1, 2))
         self._select_plan = jax.jit(select_plan)
         self._reroot_fill = jax.jit(reroot_fill, donate_argnums=(1, 2))
+        # async lookahead twins: the speculative re-root must NOT donate —
+        # the pre-reroot (tr, dcache) snapshot stays alive as the reconcile
+        # fallback basis until the verify outcome lands on the host
+        self._spec_reroot_fill = jax.jit(reroot_fill)
+        self._predict = jax.jit(jax.vmap(T.predict_accept))
         self._seed = jax.jit(seed, static_argnums=(2,))
         self._verify = jax.jit(verify, donate_argnums=(1,))
         self._dprefill = jax.jit(lambda p, t, S: draft.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
@@ -256,127 +291,61 @@ class SpecEngine:
             plan = self._select_plan(tr)
         return EngineState(tcache, dcache, tr, plan)
 
-    def admit_slot(self, tparams, dparams, state: EngineState, slot: int, prompt) -> EngineState:
-        """Admit one request into batch row ``slot`` of an in-flight state.
+    def session(self, tparams, dparams, *, state: EngineState | None = None,
+                n_slots: int | None = None, tracer=None, track: str = "engine") -> "EngineSession":
+        """Bind params (+ optional state and tracer) into an ``EngineSession``
+        — the round API: ``session.step()`` / ``admit_slot`` / ``release_slot``
+        / ``generate``, plus the async phase methods ``dispatch_verify`` /
+        ``draft_next_tree`` / ``reconcile``.  Pass ``n_slots`` to start from an
+        empty parked serving state."""
+        if state is None and n_slots is not None:
+            state = self.init_state(n_slots)
+        return EngineSession(
+            engine=self, tparams=tparams, dparams=dparams, state=state,
+            tracer=tracer if tracer is not None else NULL_TRACER, track=track)
 
-        The request is prefilled solo ([1, P] — byte-identical numerics to a
-        solo generate() start), its cache rows installed into row ``slot`` of
-        both serving caches, its tree re-seeded with its own prefix length,
-        and the batch grown/re-planned so the next verify covers it.
-        Neighboring rows' caches and trees are untouched (they only gain
-        extra draft expansions, which never changes emitted tokens — the
-        greedy-verification invariant)."""
-        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
-        P = prompt.shape[1]
-        with use_mesh(self.mesh_draft):
-            dlogits, dcache1 = self._dprefill(dparams, jnp.asarray(prompt), self.S_max_d)
-        with use_mesh(self.mesh_target):
-            _, tcache1 = self._tprefill(tparams, jnp.asarray(prompt), self.S_max_t)
-            tcache = self._install(state.tcache, tcache1, slot)
-        with use_mesh(self.mesh_draft):
-            dcache = self._install(state.dcache, dcache1, slot)
-            tr = self._seed_slot(
-                state.tr, slot, jnp.asarray(prompt[0, -1], jnp.int32),
-                jnp.asarray(P, jnp.int32), dlogits[0, -1, :],
-            )
-            for _ in range(self.grow_per_round):
-                tr, dcache = self._expand(dparams, tr, dcache)
-            plan = self._select_plan(tr)
-        return EngineState(tcache, dcache, tr, plan)
+    # --- one-release deprecation shims over the session API ---------------
+    def admit_slot(self, tparams, dparams, state: EngineState, slot: int, prompt) -> EngineState:
+        """Deprecated: use ``session(tparams, dparams, state=...).admit_slot``."""
+        warnings.warn(
+            "SpecEngine.admit_slot(tparams, dparams, state, ...) is deprecated; "
+            "bind an EngineSession via SpecEngine.session(...) instead",
+            DeprecationWarning, stacklevel=2)
+        s = self.session(tparams, dparams, state=state)
+        s.admit_slot(slot, prompt)
+        return s.state
 
     def release_slot(self, state: EngineState, slot: int) -> EngineState:
-        """Retire batch row ``slot``: park its tree and physically zero its
-        KV rows in both caches, so no state can leak into the next occupant."""
-        with use_mesh(self.mesh_target):
-            tcache = self._zero_slot(state.tcache, slot)
-        with use_mesh(self.mesh_draft):
-            dcache = self._zero_slot(state.dcache, slot)
-            tr = self._reset_slot(state.tr, slot)
-            plan = self._select_plan(tr)
-        return EngineState(tcache, dcache, tr, plan)
+        """Deprecated: use ``EngineSession.release_slot``.
+
+        The old positional form never carried params, so the shim binds None —
+        release touches no model weights."""
+        warnings.warn(
+            "SpecEngine.release_slot(state, slot) is deprecated; "
+            "bind an EngineSession via SpecEngine.session(...) instead",
+            DeprecationWarning, stacklevel=2)
+        s = self.session(None, None, state=state)
+        s.release_slot(slot)
+        return s.state
 
     def step(self, tparams, dparams, state: EngineState, stats: SpecStats | None = None,
              tracer=None, trace_track: str = "engine"):
-        """One asynchronous round for every slot (the body of generate()):
-        dispatch verification on the target group, concurrently expand the
-        draft trees, sync the verified tokens to the host, then re-root /
-        fill / grow / re-plan on the draft group.
+        """Deprecated: use ``EngineSession.step``.  Returns (state', StepResult)."""
+        warnings.warn(
+            "SpecEngine.step(tparams, dparams, state, ...) is deprecated; "
+            "bind an EngineSession via SpecEngine.session(...) instead",
+            DeprecationWarning, stacklevel=2)
+        s = self.session(tparams, dparams, state=state, tracer=tracer, track=trace_track)
+        res = s.step(stats=stats)
+        return s.state, res
 
-        Returns (state', StepResult).  Rows at different decode depths
-        coexist: all per-row quantities (prefix length, masks, acceptance)
-        live in the vmapped tree, so the serving runtime can drive rows with
-        mixed progress through the same jitted round.
-
-        ``tracer`` (repro.obs) records the round's host-side phase spans —
-        verify_dispatch / draft_expand / sync_emitted / reroot_grow — on
-        ``trace_track`` (one track per serving replica); the default
-        NULL_TRACER path is free."""
-        c = self.cfg
-        obs = tracer if tracer is not None else NULL_TRACER
-        plan = self._bypass(state.plan) if c.draft_bypass else state.plan
-        tr, dcache = state.tr, state.dcache
-        draft_steps = 0
-        # --- dispatch verification on the target group (async) -------------
-        with obs.span("verify_dispatch", trace_track):
-            with use_mesh(self.mesh_target):
-                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = self._verify(
-                    tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
-                    plan.mask, plan.parent_pos, plan.valid,
-                )
-        # --- concurrently: d tree expansions on the draft group ------------
-        if c.mode == "parallel":
-            with obs.span("draft_expand", trace_track):
-                with use_mesh(self.mesh_draft):
-                    for _ in range(c.d):
-                        tr, dcache = self._expand(dparams, tr, dcache)
-                    draft_steps += c.d
-        # --- sync point: verified tokens cross groups (host-mediated) ------
-        with obs.span("sync_emitted", trace_track):
-            # the round's ONE designated host sync: the verified-token
-            # transfer (paper's NCCL exchange) — everything else stays async
-            emitted_h = np.asarray(jax.device_get(emitted))  # repro: disable=HOTSYNC — designated sync point
-            n_emitted_h = np.asarray(jax.device_get(n_emitted))  # repro: disable=HOTSYNC — designated sync point
-            n_acc_h = np.asarray(jax.device_get(n_acc))  # repro: disable=HOTSYNC — designated sync point
-        # --- re-root, fill, grow, select next batch (draft group) ----------
-        with obs.span("reroot_grow", trace_track):
-            with use_mesh(self.mesh_draft):
-                tr, dcache = self._reroot_fill(dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
-                n_grow = c.d if c.mode == "serial" else self.grow_per_round
-                for _ in range(n_grow):
-                    tr, dcache = self._expand(dparams, tr, dcache)
-                draft_steps += n_grow
-                new_plan = self._select_plan(tr)
-        if stats is not None:
-            stats.add_round(n_emitted_h, n_acc_h)
-            stats.draft_steps += draft_steps
-        return EngineState(tcache, dcache, tr, new_plan), StepResult(emitted_h, n_emitted_h, n_acc_h)
-
-    # ---------------------------------------------------------------------
     def generate(self, tparams, dparams, prompt, max_new=None):
-        """prompt: np.ndarray [B, P] int32. Returns (tokens [B, <=max_new] list, stats)."""
-        c = self.cfg
-        max_new = max_new or c.max_new
-        B, P = prompt.shape
-        t0 = monotonic()
-
-        state = self._prefill_state(tparams, dparams, prompt)
-        out = [[] for _ in range(B)]
-        done = np.zeros(B, bool)
-        stats = SpecStats()
-        rounds_cap = max_new + 2  # greedy emits >=1 token/round
-
-        for _ in range(rounds_cap):
-            longest = 0 if stats.emitted_rows is None else int(stats.emitted_rows.max())
-            if done.all() or (P + longest) >= self.plen_budget:
-                break
-            state, res = self.step(tparams, dparams, state, stats=stats)
-            for b in range(B):
-                if not done[b]:
-                    _, done[b] = absorb_emitted(
-                        out[b], res.emitted[b], res.n_emitted[b], max_new, c.eos_id)
-
-        stats.wall_s = monotonic() - t0
-        return out, stats
+        """Deprecated: use ``session(tparams, dparams).generate(prompt)``."""
+        warnings.warn(
+            "SpecEngine.generate(tparams, dparams, prompt) is deprecated; "
+            "use SpecEngine.session(tparams, dparams).generate(prompt)",
+            DeprecationWarning, stacklevel=2)
+        return self.session(tparams, dparams).generate(prompt, max_new=max_new)
 
     def profile(self, tparams, dparams, prompt, iters: int = 3):
         """Paper §5.5 profile pass: wall-time one draft expansion and one
@@ -433,3 +402,291 @@ class SpecEngine:
             parent_pos=plan.parent_pos,
             valid=plan.valid & keep[None, :],
         )
+
+
+@dataclasses.dataclass
+class EngineSession:
+    """Params + state + tracer bound into one decode session — the round API.
+
+    Replaces the positional ``(tparams, dparams, state)`` threading: the
+    session owns the linear ``EngineState`` and advances it in place.  One
+    session per serving replica (``EngineStepper``) or per solo ``generate``.
+
+    Lockstep round (``async_rounds=False``)::
+
+        res = session.step()          # verify → expand → sync → reroot/grow
+
+    Pipelined round (``async_rounds=True``) — the paper's headline overlap::
+
+        rif = session.begin_round()   # dispatch_verify + draft_next_tree
+        ...                           # other replicas dispatch here
+        res = session.reconcile(rif)  # sync, adopt lookahead or roll back
+
+    Between ``begin_round`` and ``reconcile`` the session state is consumed
+    (buffers donated into the round) — ``admit_slot``/``release_slot``/
+    ``step`` must not run until the in-flight round reconciles.
+    """
+
+    engine: SpecEngine
+    tparams: Any
+    dparams: Any
+    state: EngineState | None = None
+    tracer: Any = NULL_TRACER
+    track: str = "engine"
+    _inflight: RoundInFlight | None = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    # ------------------------------------------------------------------
+    def admit_slot(self, slot: int, prompt) -> None:
+        """Admit one request into batch row ``slot`` of the session state.
+
+        The request is prefilled solo ([1, P] — byte-identical numerics to a
+        solo generate() start), its cache rows installed into row ``slot`` of
+        both serving caches, its tree re-seeded with its own prefix length,
+        and the batch grown/re-planned so the next verify covers it.
+        Neighboring rows' caches and trees are untouched (they only gain
+        extra draft expansions, which never changes emitted tokens — the
+        greedy-verification invariant)."""
+        self._check_quiescent("admit_slot")
+        eng, state = self.engine, self.state
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        P = prompt.shape[1]
+        with use_mesh(eng.mesh_draft):
+            dlogits, dcache1 = eng._dprefill(self.dparams, jnp.asarray(prompt), eng.S_max_d)
+        with use_mesh(eng.mesh_target):
+            _, tcache1 = eng._tprefill(self.tparams, jnp.asarray(prompt), eng.S_max_t)
+            tcache = eng._install(state.tcache, tcache1, slot)
+        with use_mesh(eng.mesh_draft):
+            dcache = eng._install(state.dcache, dcache1, slot)
+            tr = eng._seed_slot(
+                state.tr, slot, jnp.asarray(prompt[0, -1], jnp.int32),
+                jnp.asarray(P, jnp.int32), dlogits[0, -1, :],
+            )
+            for _ in range(eng.grow_per_round):
+                tr, dcache = eng._expand(self.dparams, tr, dcache)
+            plan = eng._select_plan(tr)
+        self.state = EngineState(tcache, dcache, tr, plan)
+
+    def release_slot(self, slot: int) -> None:
+        """Retire batch row ``slot``: park its tree and physically zero its
+        KV rows in both caches, so no state can leak into the next occupant."""
+        self._check_quiescent("release_slot")
+        eng, state = self.engine, self.state
+        with use_mesh(eng.mesh_target):
+            tcache = eng._zero_slot(state.tcache, slot)
+        with use_mesh(eng.mesh_draft):
+            dcache = eng._zero_slot(state.dcache, slot)
+            tr = eng._reset_slot(state.tr, slot)
+            plan = eng._select_plan(tr)
+        self.state = EngineState(tcache, dcache, tr, plan)
+
+    # ------------------------------------------------------------------
+    # the round, lockstep
+    # ------------------------------------------------------------------
+    def step(self, stats: SpecStats | None = None) -> StepResult:
+        """One round for every slot.  With ``async_rounds`` this is the
+        degenerate pipeline (begin + reconcile back-to-back — same tokens,
+        no cross-replica overlap); the serving runtime splits the two calls
+        to keep one verify and one draft outstanding per replica.
+
+        Rows at different decode depths coexist: all per-row quantities
+        (prefix length, masks, acceptance) live in the vmapped tree, so the
+        serving runtime can drive rows with mixed progress through the same
+        jitted round.
+
+        The session ``tracer`` records the round's host-side phase spans —
+        verify_dispatch / draft_expand / sync_emitted / reroot_grow (plus
+        draft_lookahead / reconcile on the async path) on ``track`` (one
+        track per serving replica); the default NULL_TRACER path is free."""
+        if self.engine.cfg.async_rounds:
+            return self.reconcile(self.begin_round(), stats=stats)
+        self._check_quiescent("step")
+        eng, obs, track = self.engine, self.tracer, self.track
+        c, state = eng.cfg, self.state
+        plan = eng._bypass(state.plan) if c.draft_bypass else state.plan
+        tr, dcache = state.tr, state.dcache
+        draft_steps = 0
+        # --- dispatch verification on the target group (async) -------------
+        with obs.span("verify_dispatch", track):
+            with use_mesh(eng.mesh_target):
+                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = eng._verify(
+                    self.tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
+                    plan.mask, plan.parent_pos, plan.valid,
+                )
+        # --- concurrently: d tree expansions on the draft group ------------
+        if c.mode == "parallel":
+            with obs.span("draft_expand", track):
+                with use_mesh(eng.mesh_draft):
+                    for _ in range(c.d):
+                        tr, dcache = eng._expand(self.dparams, tr, dcache)
+                    draft_steps += c.d
+        # --- sync point: verified tokens cross groups (host-mediated) ------
+        with obs.span("sync_emitted", track):
+            # the round's ONE designated host sync: the verified-token
+            # transfer (paper's NCCL exchange), fused — everything else async
+            emitted_h, n_emitted_h, n_acc_h = jax.device_get((emitted, n_emitted, n_acc))  # repro: disable=HOTSYNC — designated sync point
+        # --- re-root, fill, grow, select next batch (draft group) ----------
+        with obs.span("reroot_grow", track):
+            with use_mesh(eng.mesh_draft):
+                tr, dcache = eng._reroot_fill(
+                    self.dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
+                n_grow = c.d if c.mode == "serial" else eng.grow_per_round
+                for _ in range(n_grow):
+                    tr, dcache = eng._expand(self.dparams, tr, dcache)
+                draft_steps += n_grow
+                new_plan = eng._select_plan(tr)
+        self.state = EngineState(tcache, dcache, tr, new_plan)
+        if stats is not None:
+            stats.add_round(n_emitted_h, n_acc_h)
+            stats.draft_steps += draft_steps
+        return StepResult(np.asarray(emitted_h), np.asarray(n_emitted_h), np.asarray(n_acc_h))
+
+    # ------------------------------------------------------------------
+    # the round, disaggregated (async_rounds)
+    # ------------------------------------------------------------------
+    def begin_round(self) -> RoundInFlight:
+        """Dispatch one full round without syncing: verify on the target
+        group, then the speculative next-round draft on the draft group."""
+        rif = self.dispatch_verify()
+        return self.draft_next_tree(rif)
+
+    def dispatch_verify(self) -> RoundInFlight:
+        """Enqueue this round's target verification; return the in-flight
+        round handle.  No host sync — results stay device futures.  The
+        ``verify_dispatch`` span is left OPEN until the reconcile sync, so
+        on the trace it is the round's verify window and the overlap with
+        ``draft_lookahead`` is directly measurable."""
+        self._check_quiescent("dispatch_verify")
+        eng, state = self.engine, self.state
+        plan = eng._bypass(state.plan) if eng.cfg.draft_bypass else state.plan
+        span = self.tracer.begin("verify_dispatch", self.track)
+        with use_mesh(eng.mesh_target):
+            acc_pos, n_acc, bonus, emitted, n_emitted, tcache = eng._verify(
+                self.tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
+                plan.mask, plan.parent_pos, plan.valid,
+            )
+        rif = RoundInFlight(
+            plan=plan, tcache=tcache,
+            verify=(acc_pos, n_acc, bonus, emitted, n_emitted),
+            verify_span=span,
+        )
+        self._inflight = rif
+        return rif
+
+    def draft_next_tree(self, rif: RoundInFlight) -> RoundInFlight:
+        """While verify runs: finish this round's d expansions, predict the
+        accept path (``tree.predict_accept``), and draft round N+1's tree on
+        the predicted-accept seed — the paper's draft-ahead.  The pre-reroot
+        (tr, dcache) snapshot is retained (the speculative re-root does not
+        donate), so ``reconcile`` can roll back a rejected seed exactly."""
+        eng, c = self.engine, self.engine.cfg
+        tr, dcache = self.state.tr, self.state.dcache
+        with self.tracer.span("draft_lookahead", self.track):
+            with use_mesh(eng.mesh_draft):
+                for _ in range(c.d):
+                    tr, dcache = eng._expand(self.dparams, tr, dcache)
+                rif.draft_steps += c.d
+                # post-expansion, pre-reroot: the rollback point
+                rif.snapshot = (tr, dcache)
+                rif.pred = eng._predict(
+                    tr, rif.plan.node_ids, rif.plan.parent_pos, rif.plan.valid)
+                pred_acc, pred_n, pred_bonus = rif.pred
+                la_tr, la_dcache = eng._spec_reroot_fill(
+                    self.dparams, tr, dcache, rif.plan.node_ids,
+                    pred_acc, pred_n, pred_bonus)
+                for _ in range(eng.grow_per_round):
+                    la_tr, la_dcache = eng._expand(self.dparams, la_tr, la_dcache)
+                rif.draft_steps += eng.grow_per_round
+                rif.lookahead = (la_tr, la_dcache, eng._select_plan(la_tr))
+        return rif
+
+    def reconcile(self, rif: RoundInFlight, stats: SpecStats | None = None,
+                  live=None) -> StepResult:
+        """Sync the verify outcome and resolve the speculation: adopt the
+        lookahead tree when the predicted accept path held, else roll back
+        to the retained snapshot and re-root on the actual path (the exact
+        lockstep tail, one round late).
+
+        ``live``: optional bool[B] row occupancy mask — prediction mismatches
+        on parked rows are ignored (their trees never reach verification and
+        admission fully overwrites the row).  Emitted tokens always come from
+        the actual verify, so outputs are byte-identical to lockstep on both
+        branches."""
+        eng, obs, track = self.engine, self.tracer, self.track
+        acc_pos, n_acc, bonus, emitted, n_emitted = rif.verify
+        pred_acc, pred_n, pred_bonus = rif.pred
+        with obs.span("sync_emitted", track):
+            # the round's ONE designated host sync: verified tokens and the
+            # prediction verdict cross in a single fused transfer
+            (emitted_h, n_emitted_h, n_acc_h, acc_h, bonus_h, pred_acc_h, pred_n_h, pred_bonus_h) = jax.device_get(  # repro: disable=HOTSYNC — designated sync point
+                (emitted, n_emitted, n_acc, acc_pos, bonus, pred_acc, pred_n, pred_bonus))
+        rif.verify_span.end()
+        ok = ((pred_n_h == n_acc_h) & (pred_bonus_h == bonus_h)
+              & (pred_acc_h == acc_h).all(axis=1))
+        if live is not None:
+            ok = ok | ~np.asarray(live, bool)
+        draft_steps = rif.draft_steps
+        if ok.all():
+            # seed held for every live row: round N+1's tree is already drafted
+            tr, dcache, new_plan = rif.lookahead
+            if stats is not None:
+                stats.spec_commits += 1
+        else:
+            with obs.span("reconcile", track):
+                with use_mesh(eng.mesh_draft):
+                    tr, dcache = rif.snapshot
+                    tr, dcache = eng._reroot_fill(
+                        self.dparams, tr, dcache, rif.plan.node_ids, acc_pos, n_acc, bonus)
+                    for _ in range(eng.grow_per_round):
+                        tr, dcache = eng._expand(self.dparams, tr, dcache)
+                    draft_steps += eng.grow_per_round
+                    new_plan = eng._select_plan(tr)
+        self.state = EngineState(rif.tcache, dcache, tr, new_plan)
+        self._inflight = None
+        if stats is not None:
+            stats.spec_rounds += 1
+            stats.add_round(n_emitted_h, n_acc_h)
+            stats.draft_steps += draft_steps
+        return StepResult(np.asarray(emitted_h), np.asarray(n_emitted_h), np.asarray(n_acc_h))
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt, max_new=None):
+        """prompt: np.ndarray [B, P] int32. Returns (tokens [B, <=max_new] list, stats).
+
+        Rebuilds the session state from a whole-batch prefill of ``prompt``
+        (any prior state is discarded), then loops rounds."""
+        eng, c = self.engine, self.engine.cfg
+        max_new = max_new or c.max_new
+        B, P = prompt.shape
+        t0 = monotonic()
+
+        self.state = eng._prefill_state(self.tparams, self.dparams, prompt)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        stats = SpecStats()
+        rounds_cap = max_new + 2  # greedy emits >=1 token/round
+
+        for _ in range(rounds_cap):
+            longest = 0 if stats.emitted_rows is None else int(stats.emitted_rows.max())
+            if done.all() or (P + longest) >= eng.plen_budget:
+                break
+            res = self.step(stats=stats)
+            for b in range(B):
+                if not done[b]:
+                    _, done[b] = absorb_emitted(
+                        out[b], res.emitted[b], res.n_emitted[b], max_new, c.eos_id)
+
+        stats.wall_s = monotonic() - t0
+        return out, stats
+
+    @property
+    def plen_budget(self) -> int:
+        return self.engine.plen_budget
+
+    def _check_quiescent(self, what: str) -> None:
+        if self._inflight is not None:
+            raise RuntimeError(
+                f"EngineSession.{what} called with a round in flight; "
+                "reconcile() the outstanding RoundInFlight first — the state's "
+                "buffers are donated into the round")

@@ -7,6 +7,15 @@ from the pre-move cache in full before any write), so overlapping src/dst
 rows are safe by construction.  Row ops touch only attention-cache leaves
 ("k"/"v"/"ckv"/"krope"); SSM states and cross-encoder KV are structurally
 exempt (chain mode / static).
+
+Speculative fork / rollback contract (async rounds): because every operation
+here is functional, a cache "snapshot" is just a retained reference — zero
+copies.  The async lookahead (``EngineSession.draft_next_tree``) keeps the
+pre-reroot (tree, dcache) pair alive and re-roots through a NON-donating jit;
+if the lookahead seed is rejected, ``reconcile`` simply re-applies the move
+plan to the retained reference (exact rollback), and if it commits, dropping
+the reference frees the fork.  Any new cache op must preserve this: never
+mutate a cache in place, and never donate a buffer the caller may still hold.
 """
 
 from __future__ import annotations

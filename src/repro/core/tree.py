@@ -221,7 +221,10 @@ def leaf_inputs(tree: Tree, leaf_ids, leaf_valid, S_max: int, window: int = 0):
     tree-cache rows.
     """
     w = leaf_ids.shape[0]
-    is_root = leaf_ids == 0
+    # gate on leaf_valid: top_k pads short leaf sets with arbitrary ids, and a
+    # padded id of 0 must NOT alias the root — it would claim row plen-1 and
+    # the expansion forward would clobber the root's prefix KV with garbage
+    is_root = (leaf_ids == 0) & leaf_valid
     non_root = leaf_valid & ~is_root
     rank = jnp.cumsum(non_root.astype(jnp.int32)) - 1
     rows = jnp.where(
@@ -364,6 +367,53 @@ def verify_walk(plan_tokens, plan_parent_pos, plan_valid, argmax_tokens):
     emitted = emitted.at[n_acc].set(bonus)
     n_emitted = n_acc + 1
     return acc, n_acc, bonus, emitted, n_emitted
+
+
+def predict_accept(tree: Tree, plan_node_ids, plan_parent_pos, plan_valid):
+    """Draft-side prediction of ``verify_walk``'s outcome, from the tree alone.
+
+    The async lookahead (engine ``draft_next_tree``) needs a guess at this
+    round's accept path *before* the target's argmax tokens exist on the host.
+    The draft's best guess is its own most probable chain: at every step take
+    the FIRST plan slot whose parent is the current node — ``select_batch``
+    orders slots by a stable weight sort, so the first matching slot is the
+    top-weight (most probable) child.  Unlike ``verify_walk`` there is no
+    token check: the walk ends only when the current node has no child in
+    the plan.
+
+    The predicted bonus is the target's argmax at the last accepted node,
+    guessed as the draft's top-probability child of that node in the FULL
+    tree (``insert_children`` appends children in descending-prob order, so
+    the lowest-indexed child is the top one).  If the node has no child at
+    all, -1 — a value the real bonus (a vocab id) can never take, forcing
+    the reconcile fallback.
+
+    Returns (acc i32[bs] predicted batch slots (-1 pad), n_acc i32,
+    bonus i32).  Prediction is correct iff the target greedily accepts the
+    draft's entire top chain AND its bonus equals the draft's top child —
+    exactly the event the lookahead tree bets on.
+    """
+    bs = plan_node_ids.shape[0]
+
+    def step(state, _):
+        cur, alive, acc, n_acc = state
+        is_child = (plan_parent_pos == cur) & plan_valid
+        found = jnp.any(is_child) & alive
+        child = jnp.argmax(is_child).astype(jnp.int32)
+        acc = jnp.where(found, acc.at[n_acc].set(child), acc)
+        n_acc = n_acc + jnp.where(found, 1, 0)
+        cur = jnp.where(found, child, cur)
+        alive = alive & found
+        return (cur, alive, acc, n_acc), None
+
+    acc0 = jnp.full((bs,), -1, jnp.int32)
+    (cur, _, acc, n_acc), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.int32), jnp.ones((), bool), acc0, jnp.zeros((), jnp.int32)), None, length=bs
+    )
+    last_node = plan_node_ids[jnp.maximum(cur, 0)]  # plan slot -> tree node (root if none)
+    is_c = (tree.parent == last_node) & tree.valid
+    bonus = jnp.where(jnp.any(is_c), tree.tokens[jnp.argmax(is_c)], -1)
+    return acc, n_acc, bonus.astype(jnp.int32)
 
 
 # -----------------------------------------------------------------------------

@@ -16,6 +16,11 @@ printed, and each finished output is checked byte-identical against a solo
 ``generate()`` run (--no-verify to skip).  ``--replicas N`` shards the
 continuous runtime over N SpecEngine replicas on disjoint device groups
 (one global queue, least-loaded routing, per-replica + fleet telemetry).
+``--async-rounds`` turns on asynchronous round disaggregation
+(docs/async-disaggregation.md): each replica drafts round N+1's tree while
+round N verifies, reconciling on a rejected lookahead seed — outputs stay
+byte-identical to lockstep, and the traced ``draft_lookahead`` /
+``verify_dispatch`` overlap in the phase breakdown is the evidence.
 ``--trace-out trace.json --metrics-out metrics.json`` records per-round
 phase spans (draft expand / verify / sync / reroot / absorb — viewable in
 ui.perfetto.dev) and a metrics snapshot with the round-time decomposition
@@ -43,7 +48,7 @@ from repro.obs.clock import monotonic
 
 def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="parallel",
                  bs=8, w=4, c=2, d=2, max_new=48, S_max=512, n_target=6, n_draft=2,
-                 peaked=True, replicas=1):
+                 peaked=True, replicas=1, async_rounds=False):
     """Build the serving engine(s).  With ``replicas > 1`` the device slice is
     carved into that many disjoint (target, draft) mesh pairs and one
     SpecEngine is built per pair; replicas whose mesh pair falls back to the
@@ -61,7 +66,8 @@ def build_engine(target_arch: str, draft_arch: str, *, smoke=True, mode="paralle
         # chains are peaked enough for realistic acceptance behaviour
         tp["lm_head"].value = tp["lm_head"].value * 4.0
         dp["lm_head"].value = dp["lm_head"].value * 4.0
-    cfg = SpecConfig(bs=bs, w=w, c=c, d=d, mode=mode, max_new=max_new)
+    cfg = SpecConfig(bs=bs, w=w, c=c, d=d, mode=mode, max_new=max_new,
+                     async_rounds=async_rounds)
 
     def mk(mesh_t, mesh_d):
         return SpecEngine(T, D, cfg, S_max_t=S_max, S_max_d=S_max,
@@ -142,11 +148,12 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
 
     if args.verify:
         ref = engines[0] if isinstance(engines, list) else engines
+        sess = ref.session(tp, dp)
         mismatches = 0
         for r in trace:
             if r.rid not in results:
                 continue
-            solo, _ = ref.generate(tp, dp, r.prompt.reshape(1, -1), max_new=r.max_new)
+            solo, _ = sess.generate(r.prompt.reshape(1, -1), max_new=r.max_new)
             ok = results[r.rid] == solo[0]
             mismatches += 0 if ok else 1
             where = ""
@@ -173,6 +180,11 @@ def main(argv=None):
     ap.add_argument("--n-draft", type=int, default=2)
     ap.add_argument("--continuous", action="store_true",
                     help="serve a Poisson trace through the continuous-batching runtime")
+    ap.add_argument("--async-rounds", action="store_true",
+                    help="asynchronous round disaggregation: draft round N+1's "
+                         "tree on the draft mesh while round N verifies on the "
+                         "target mesh (parallel mode only; outputs stay "
+                         "byte-identical to lockstep)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="continuous: SpecEngine replicas on disjoint device groups "
                          "(one global queue, depth-aware routing)")
@@ -193,7 +205,7 @@ def main(argv=None):
     eng, tp, dp, cfgT = build_engine(
         args.target_arch, args.draft_arch, mode=args.mode, bs=args.bs, w=args.w,
         d=args.d or 2, max_new=args.max_new, n_target=args.n_target, n_draft=args.n_draft,
-        replicas=replicas,
+        replicas=replicas, async_rounds=args.async_rounds,
     )
     eng0 = eng[0] if isinstance(eng, list) else eng
 
@@ -216,9 +228,10 @@ def main(argv=None):
     eng = eng0
 
     total_toks, total_s = 0, 0.0
+    sess = eng.session(tp, dp)
     for i, prompt in enumerate(make_request_stream(cfgT.vocab_size, args.prompt_len, 1, args.requests)):
         t0 = monotonic()
-        out, stats = eng.generate(tp, dp, prompt)
+        out, stats = sess.generate(prompt)
         dt = monotonic() - t0
         total_toks += len(out[0])
         total_s += dt

@@ -40,6 +40,7 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     Series,
+    merge_histograms,
 )
 from repro.obs.report import breakdown_report, phase_breakdown
 from repro.obs.trace import NOOP_SPAN, NULL_TRACER, Span, Tracer
@@ -55,5 +56,6 @@ __all__ = [
     "Span",
     "Tracer",
     "breakdown_report",
+    "merge_histograms",
     "phase_breakdown",
 ]

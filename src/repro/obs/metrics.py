@@ -133,6 +133,13 @@ class MetricsRegistry:
     def series(self, name: str, maxlen: int = 4096, **labels) -> Series:
         return self._get("series", name, labels, lambda: Series(maxlen))
 
+    def histogram_family(self, name: str) -> list[tuple[dict, Histogram]]:
+        """Every (labels, histogram) pair registered under ``name`` — e.g.
+        the per-replica ``serving_accept_depth`` family, for fleet-level
+        merging with ``merge_histograms``.  Read-only: does not create."""
+        fam = self._m["histogram"].get(name, {})
+        return [(dict(key), h) for key, h in sorted(fam.items())]
+
     # ---- export ----------------------------------------------------------
     def snapshot(self) -> dict:
         """Structured dump of every metric (the ``--metrics-out`` payload)."""
@@ -207,3 +214,27 @@ class MetricsRegistry:
 
 def _fmt(v: float) -> str:
     return str(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+def merge_histograms(hists) -> Histogram:
+    """Merge histograms that may have DIFFERENT bucket layouts: the result's
+    buckets are the sorted union of every source's upper bounds, each source
+    bucket's count lands at the union bucket with the same upper bound, and
+    +Inf counts stay in +Inf.  Lossless in the Prometheus sense — an
+    observation counted "<= ub" at the source is still counted "<= ub" in
+    the merge (replicas running different draft depths have different
+    ``serving_accept_depth`` edges; summing counts positionally would
+    misfile them)."""
+    hists = list(hists)
+    if not hists:
+        raise ValueError("need at least one histogram to merge")
+    edges = sorted({ub for h in hists for ub in h.buckets})
+    out = Histogram(edges)
+    pos = {ub: i for i, ub in enumerate(edges)}
+    for h in hists:
+        for ub, c in zip(h.buckets, h.counts):
+            out.counts[pos[ub]] += c
+        out.counts[-1] += h.counts[-1]
+        out.sum += h.sum
+        out.count += h.count
+    return out

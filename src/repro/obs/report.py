@@ -3,40 +3,84 @@
 Folds a ``Tracer``'s spans into a per-round latency breakdown: how much of
 each serving round went to draft-tree work (expansion + KV reconciliation
 after re-root), target verification (dispatch + the verified-token device
-sync), and host-side absorption.  This is the baseline evidence the async
-disaggregation work (ROADMAP #1) needs — the whole point of running draft
-and target concurrently is to hide the smaller of the draft/verify fractions
-reported here.
+sync), and host-side absorption.  With async disaggregation on
+(``SpecConfig.async_rounds``) the breakdown additionally measures the
+pipeline's whole point: the wall time where ``draft_lookahead`` ran *inside*
+the open verify window (``overlap_draft_verify_s``), and the draft time that
+stayed serialized on the critical path (``draft_serialized_s`` /
+``draft_serialized_frac`` — the number async mode exists to shrink).
 
 Span taxonomy (docs/observability.md):
   round         one global serving round on one replica track
-  ├─ verify_dispatch   enqueue target verification (async dispatch)
-  ├─ draft_expand      the d concurrent tree expansions (parallel mode)
+  ├─ verify_dispatch   target verification window; lockstep: the enqueue
+  │                    only (async dispatch), async rounds: held open from
+  │                    dispatch until the verified tokens land
+  ├─ draft_expand      the d concurrent tree expansions (lockstep parallel mode)
+  ├─ draft_lookahead   async: next round's tree drafted on the predicted-
+  │                    accept path while verify is still in flight
   ├─ sync_emitted      host sync on the verified-token transfer
-  ├─ reroot_grow       tree re-root + KV fill + regrow + next plan
+  ├─ reroot_grow       tree re-root + KV fill + regrow + next plan (lockstep)
+  ├─ reconcile         async: rollback + re-root after a rejected lookahead seed
   └─ absorb            host-side token absorption / retire / stream
+
+Because async phases genuinely overlap (that is the feature), coverage and
+the overlap metrics are computed on interval *unions* per round, never by
+summing durations — a nested span can't push coverage past 1.0 or count the
+same wall-clock millisecond twice.
 """
 
 from __future__ import annotations
 
 # top-level phases inside one round span (nested spans, e.g. ``retire``
 # inside ``absorb``, are excluded so coverage never double-counts)
-ROUND_PHASES = ("verify_dispatch", "draft_expand", "sync_emitted",
-                "reroot_grow", "absorb")
+ROUND_PHASES = ("verify_dispatch", "draft_expand", "draft_lookahead",
+                "sync_emitted", "reconcile", "reroot_grow", "absorb")
 PHASE_GROUPS = {
-    "draft": ("draft_expand", "reroot_grow"),
+    "draft": ("draft_expand", "draft_lookahead", "reconcile", "reroot_grow"),
     "verify": ("verify_dispatch", "sync_emitted"),
     "absorb": ("absorb",),
 }
+
+
+def _merge(intervals):
+    """Coalesce [t0, t1) intervals into a sorted disjoint union."""
+    out: list[list[float]] = []
+    for t0, t1 in sorted(intervals):
+        if out and t0 <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], t1)
+        else:
+            out.append([t0, t1])
+    return out
+
+
+def _length(intervals) -> float:
+    return sum(t1 - t0 for t0, t1 in intervals)
+
+
+def _intersect(a, b):
+    """Intersection of two sorted disjoint interval unions."""
+    out, i, j = [], 0, 0
+    while i < len(a) and j < len(b):
+        lo, hi = max(a[i][0], b[j][0]), min(a[i][1], b[j][1])
+        if lo < hi:
+            out.append([lo, hi])
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
 
 
 def phase_breakdown(tracer) -> dict:
     """Decompose every ``round`` span into its phase children.
 
     Returns per-phase totals/fractions, the draft/verify/absorb grouping,
-    and span coverage (fraction of round wall time accounted for by phase
-    spans — the instrument-completeness check; ≥0.95 means the trace
-    explains where each round's milliseconds went)."""
+    span coverage (union of phase intervals over round wall time — the
+    instrument-completeness check; ≥0.95 means the trace explains where each
+    round's milliseconds went), and the async-pipeline evidence:
+    ``overlap_draft_verify_s`` (draft wall time inside the verify window)
+    and ``draft_serialized_s``/``draft_serialized_frac`` (draft wall time
+    still on the critical path)."""
     spans = tracer.spans()
     rounds = sorted((s for s in spans if s.name == "round"),
                     key=lambda s: (s.track, s.t0))
@@ -50,10 +94,12 @@ def phase_breakdown(tracer) -> dict:
     phase_s = dict.fromkeys(ROUND_PHASES, 0.0)
     coverages: list[float] = []
     round_total = 0.0
+    overlap_s = 0.0
+    draft_union_s = 0.0
     cursor = dict.fromkeys(by_track, 0)  # per-track scan position
     for r in rounds:
         round_total += r.dur
-        covered = 0.0
+        kids_here: list = []
         kids = by_track.get(r.track, ())
         i = cursor.get(r.track, 0)
         # skip children that ended before this round began (earlier rounds)
@@ -63,10 +109,17 @@ def phase_breakdown(tracer) -> dict:
         while i < len(kids) and kids[i].t0 < r.t1:
             if kids[i].t1 <= r.t1:
                 phase_s[kids[i].name] += kids[i].dur
-                covered += kids[i].dur
+                kids_here.append(kids[i])
             i += 1
+        covered = _length(_merge([(k.t0, k.t1) for k in kids_here]))
         if r.dur > 0:
             coverages.append(covered / r.dur)
+        draft_win = _merge([(k.t0, k.t1) for k in kids_here
+                            if k.name in PHASE_GROUPS["draft"]])
+        verify_win = _merge([(k.t0, k.t1) for k in kids_here
+                             if k.name in PHASE_GROUPS["verify"]])
+        overlap_s += _length(_intersect(draft_win, verify_win))
+        draft_union_s += _length(draft_win)
 
     # zero rounds (empty trace) must read as "unknown", not "instantaneous":
     # a 0.0 mean_round_s or coverage from a dead tracer would sail straight
@@ -83,6 +136,14 @@ def phase_breakdown(tracer) -> dict:
         },
         "coverage_mean": sum(coverages) / len(coverages) if coverages else nan,
         "coverage_min": min(coverages) if coverages else nan,
+        # async-pipeline evidence: draft wall time hidden under the verify
+        # window vs. still serialized on the critical path (union-based, so
+        # lockstep traces report overlap == 0.0 exactly)
+        "overlap_draft_verify_s": overlap_s,
+        "draft_serialized_s": draft_union_s - overlap_s,
+        "draft_serialized_frac": (
+            (draft_union_s - overlap_s) / round_total if round_total else nan
+        ),
     }
     for group, members in PHASE_GROUPS.items():
         tot = sum(phase_s[m] for m in members)
@@ -106,5 +167,10 @@ def breakdown_report(bd: dict) -> str:
     lines.append(
         f"  => draft {bd['draft_frac']:.1%} / verify {bd['verify_frac']:.1%} "
         f"/ absorb {bd['absorb_frac']:.1%} of round wall time"
+    )
+    lines.append(
+        f"  => draft overlapped with verify {bd['overlap_draft_verify_s'] * 1e3:.2f} ms, "
+        f"serialized {bd['draft_serialized_s'] * 1e3:.2f} ms "
+        f"({bd['draft_serialized_frac']:.1%} of round)"
     )
     return "\n".join(lines)

@@ -83,7 +83,11 @@ class ShardedServingRuntime(ServingRuntimeBase):
         return [s.stats for s in self.steppers]
 
     def summary(self) -> dict:
-        return merge_summary(self.stats)
+        # per-replica accept-depth histograms may have different bucket
+        # edges (replicas can run different draft depths) — merge_summary
+        # unions the edges instead of summing counts positionally
+        hists = [h for _, h in self.metrics.histogram_family("serving_accept_depth")]
+        return merge_summary(self.stats, accept_hists=hists or None)
 
     def report(self) -> str:
         return fleet_report(self.stats)

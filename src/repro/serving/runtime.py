@@ -35,7 +35,7 @@ import dataclasses
 import time
 from typing import Callable
 
-from repro.core.engine import absorb_emitted
+from repro.core.engine import RoundInFlight, SpecStats, absorb_emitted
 from repro.obs.clock import monotonic
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NOOP_SPAN, NULL_TRACER
@@ -128,7 +128,6 @@ class EngineStepper:
         self.stats = stats if stats is not None else ServerStats()
         self.stream = stream
         self.results = results if results is not None else {}
-        self.state = engine.init_state(n_slots)
         self.slots: list[_Active | None] = [None] * n_slots
         # the engine's KV-budget bound (shared with generate(), so serving
         # truncates at exactly the same token as a solo run)
@@ -139,6 +138,11 @@ class EngineStepper:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.track = f"replica{replica}"
         self._round_span = NOOP_SPAN
+        # the bound round API: params + EngineState + tracer, one per replica
+        self.session = engine.session(
+            tparams, dparams, n_slots=n_slots, tracer=self.tracer,
+            track=self.track)
+        self.spec_stats = SpecStats()  # engine-level round accounting
         rep = str(replica)
         m = self.metrics
         self._m_rounds = m.counter("serving_rounds_total", replica=rep)
@@ -154,8 +158,18 @@ class EngineStepper:
         self._m_ttft = m.histogram("serving_ttft_seconds", buckets=TTFT_BUCKETS,
                                    replica=rep)
         self._m_occupancy = m.series("serving_occupancy", replica=rep)
+        self._m_spec_commits = m.counter("serving_spec_commits_total", replica=rep)
 
     # ------------------------------------------------------------------
+    @property
+    def state(self):
+        """The session's EngineState (back-compat view; tests poke at it)."""
+        return self.session.state
+
+    @state.setter
+    def state(self, s):
+        self.session.state = s
+
     @property
     def occupied(self) -> int:
         return sum(1 for s in self.slots if s is not None)
@@ -179,29 +193,41 @@ class EngineStepper:
         with self.tracer.span("admit_prefill", self.track,
                               args={"rid": req.rid, "slot": slot,
                                     "plen": int(req.prompt.size)}):
-            self.state = self.engine.admit_slot(
-                self.tparams, self.dparams, self.state, slot, req.prompt)
+            self.session.admit_slot(slot, req.prompt)
         self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
         self.stats.on_admit(req.rid, slot, req.arrival_s, now, replica=self.replica)
         self._m_admitted.inc()
         return slot
 
     def step(self):
-        """One jitted engine round for every slot; returns the StepResult
-        (absorb it with ``absorb_round`` after the clock has advanced).
+        """Dispatch one engine round for every slot.  Lockstep: runs the full
+        round and returns its StepResult.  Async (``cfg.async_rounds``):
+        dispatches verify + the speculative next-round draft and returns the
+        ``RoundInFlight`` WITHOUT syncing — the host is free to step the
+        other replicas (the two-stage pipeline: one verify and one draft
+        outstanding per replica) until ``absorb_round`` reconciles it.
 
         Opens this replica's ``round`` span; ``absorb_round`` closes it, so
         the span brackets dispatch through absorption — the engine's phase
         spans (verify/draft/sync/reroot) plus ``absorb`` are its children."""
         self._round_span = self.tracer.begin("round", self.track)
-        self.state, res = self.engine.step(
-            self.tparams, self.dparams, self.state,
-            tracer=self.tracer, trace_track=self.track)
-        return res
+        if self.engine.cfg.async_rounds:
+            return self.session.begin_round()
+        return self.session.step(stats=self.spec_stats)
 
     def absorb_round(self, res, now: float) -> None:
-        """Fold one StepResult into every occupied slot, retiring the rows
-        that finished (EOS / max_new / cache budget)."""
+        """Fold one round's outcome into every occupied slot, retiring the
+        rows that finished (EOS / max_new / cache budget).  An in-flight
+        async round is reconciled here — prediction mismatches on
+        unoccupied rows are ignored (``live`` mask), since parked trees
+        never reach verification and admission overwrites the row."""
+        if isinstance(res, RoundInFlight):
+            pre = self.spec_stats.spec_commits
+            res = self.session.reconcile(
+                res, stats=self.spec_stats,
+                live=[s is not None for s in self.slots])
+            if self.spec_stats.spec_commits > pre:
+                self._m_spec_commits.inc()
         self._m_occupancy.append(now, self.occupied)  # pre-retire, as stats does
         with self.tracer.span("absorb", self.track):
             for slot, act in enumerate(self.slots):
@@ -240,7 +266,7 @@ class EngineStepper:
         self.results[act.req.rid] = act.out
         with self.tracer.span("retire", self.track, args={"rid": act.req.rid,
                                                           "slot": slot}):
-            self.state = self.engine.release_slot(self.state, slot)
+            self.session.release_slot(slot)
         self.slots[slot] = None
         self.stats.on_finish(act.req.rid, now, truncated=act.truncated)
         self._m_finished.inc()

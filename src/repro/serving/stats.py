@@ -152,11 +152,17 @@ class ServerStats:
 # ---------------------------------------------------------------------------
 
 
-def merge_summary(per_replica: list["ServerStats"]) -> dict:
+def merge_summary(per_replica: list["ServerStats"], accept_hists=None) -> dict:
     """Fold N per-replica ServerStats into one fleet summary: global TTFT
     percentiles and throughput (tokens over the union of serving windows),
     plus the per-replica occupancy/round breakdown that shows whether the
-    router kept the fleet balanced."""
+    router kept the fleet balanced.
+
+    ``accept_hists`` (optional): the per-replica ``serving_accept_depth``
+    Histogram objects.  Replicas may run different draft depths and so have
+    different bucket edges — the merge unions the edges rather than summing
+    counts positionally — and the result lands in ``accept_depth_mean`` /
+    ``accept_depth_hist``."""
     recs = [r for st in per_replica for r in st.finished_records()]
     ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
     total_tokens = sum(r.n_tokens for r in recs)
@@ -168,7 +174,18 @@ def merge_summary(per_replica: list["ServerStats"]) -> dict:
     # replicas actually sustained
     rounds = np.asarray([st.rounds for st in per_replica], np.float64)
     occs = np.asarray([st.mean_occupancy for st in per_replica], np.float64)
+    extra: dict = {}
+    if accept_hists:
+        from repro.obs.metrics import merge_histograms
+
+        merged = merge_histograms(accept_hists)
+        extra["accept_depth_mean"] = merged.mean
+        extra["accept_depth_hist"] = {
+            "buckets": list(merged.buckets), "counts": list(merged.counts),
+            "sum": merged.sum, "count": merged.count,
+        }
     return {
+        **extra,
         "n_replicas": len(per_replica),
         "n_finished": len(recs),
         "total_tokens": total_tokens,

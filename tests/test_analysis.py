@@ -216,19 +216,30 @@ def test_cli_json_report(tmp_path):
 
 
 def test_src_is_clean_modulo_baseline(capsys):
+    """The shipped tree is clean with an EMPTY baseline: the session-API
+    refactor retired the last grandfathered entries (the chain engine's
+    split host syncs are now ONE fused, suppressed sync point)."""
+    assert load_baseline(BASELINE) == {}
     assert main([SRC, "--baseline", BASELINE]) == 0
     out = capsys.readouterr().out
-    assert "-> clean" in out and "[baselined]" in out
+    assert "-> clean" in out and "0 baselined" in out
 
 
 def test_deleting_a_baseline_entry_fails_the_run(tmp_path, capsys):
-    baseline = load_baseline(BASELINE)
-    assert baseline, "shipped baseline must not be empty for this gate"
+    """The deletion gate, exercised on a fixture baseline (src/ ships an
+    empty one): grandfather a bad file's findings, prune one entry, and the
+    resurfaced finding must flip the exit code."""
+    src = open(os.path.join(FIXTURES, "clock_bad.py"), encoding="utf-8").read()
+    (tmp_path / "m.py").write_text(src)
+    findings = analyze_file(str(tmp_path / "m.py"), str(tmp_path), ProjectContext())
+    bl = tmp_path / "bl.json"
+    assert write_baseline(str(bl), findings, "fixture grandfather") == len(findings)
+    assert main([str(tmp_path), "--baseline", str(bl)]) == 0
+    baseline = load_baseline(str(bl))
     victim = sorted(baseline)[0]
     pruned = {k: v for k, v in baseline.items() if k != victim}
-    path = tmp_path / "pruned.json"
-    path.write_text(json.dumps({"version": 1, "entries": pruned}))
-    assert main([SRC, "--baseline", str(path)]) == 1
+    bl.write_text(json.dumps({"version": 1, "entries": pruned}))
+    assert main([str(tmp_path), "--baseline", str(bl)]) == 1
     capsys.readouterr()
 
 
