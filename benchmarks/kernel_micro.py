@@ -20,7 +20,8 @@ from __future__ import annotations
 
 from repro.configs import get_config
 
-from benchmarks.common import AR_BASE, HBM_BW, ICI_HOP, LINK_BW, OP_OVERHEAD, PEAK_FLOPS, write_csv
+from benchmarks.common import (AR_BASE, HBM_BW, ICI_HOP, LINK_BW, OP_OVERHEAD,
+                               PEAK_FLOPS, write_csv, write_json)
 
 BS = 8
 CONFIGS = [("llama3-1b", 4), ("llama3-3b", 4), ("llama3-8b", 4), ("llama3-70b", 4), ("llama3-70b", 8)]
@@ -71,7 +72,29 @@ def kernel_rows(cfg, tp, context=500):
     fused = max(t_w + t_x2 / 2, t_fl) + OP_OVERHEAD
     rows.append([cfg.name, tp, "swiglu", round(unfused * 1e6, 2),
                  round(fused * 1e6, 2), round(unfused / fused, 2)])
+
+    # --- KV reorganization (paper §3.2): fused O(M) row moves --------------
+    dense_b, fused_b = kv_reorg_bytes(cfg, tp, context=context)
+    unfused = dense_b / HBM_BW + 2 * OP_OVERHEAD  # gather pass + scatter pass
+    fused = fused_b / HBM_BW + OP_OVERHEAD  # one launch, moved rows only
+    rows.append([cfg.name, tp, f"kv_reorg_ctx{context}", round(unfused * 1e6, 2),
+                 round(fused * 1e6, 2), round(unfused / fused, 2)])
     return rows
+
+
+def kv_reorg_bytes(cfg, tp, context=500, moved=BS):
+    """Modeled HBM traffic of one per-round cache reorganization (verify
+    compaction / draft re-root, core/kv.apply_moves): the one-hot einsum
+    formulation reads AND rewrites the whole [B, S, F] cache for both the
+    gather and the scatter pass, O(B·S·F) that scales with context; the
+    fused kv_move_rows kernel DMAs only the M ≈ bs moved rows per batch
+    element, O(B·M·F) (kernels/kv_moves.py).  Returns (dense, fused) bytes
+    per move across the k+v leaves of every layer."""
+    hkv, hd, act = cfg.n_kv_heads, cfg.head_dim, 2.0  # bf16 rows
+    row_bytes = 2 * hkv * hd * act * cfg.n_layers / tp  # k+v, all layers
+    dense = 2 * 2 * BS * context * row_bytes  # 2 passes x (read + write) x S
+    fused = 2 * BS * moved * row_bytes  # read + write of M rows
+    return dense, fused
 
 
 def utilization_rows(cfg, tp, context=500):
@@ -127,6 +150,23 @@ def run():
     assert util["qkv_proj"] > 60 and util["down_proj"] > 60, util
     print(f"  TPU adaptation: GEMMs HBM-saturated ({util['qkv_proj']:.0f}%/{util['down_proj']:.0f}%), "
           f"attention/all-reduce latency-bound ({util['attention']:.0f}%/{util['all_reduce']:.0f}%); {p3}")
+
+    # KV-reorg traffic: the O(B·S·F) -> O(B·M·F) drop, quantified per config
+    # (the ratio is context/moved: traffic no longer scales with context)
+    reorg = []
+    for name, tp in CONFIGS:
+        cfg = get_config(name)
+        for context in (500, 2000, 8000):
+            dense_b, fused_b = kv_reorg_bytes(cfg, tp, context=context)
+            reorg.append({"model": name, "tp": tp, "context": context,
+                          "moved_rows": BS, "dense_onehot_bytes": int(dense_b),
+                          "fused_bytes": int(fused_b),
+                          "traffic_ratio": round(dense_b / fused_b, 1)})
+            assert fused_b < dense_b, (name, context)
+    pkv = write_json("kv_reorg_traffic.json", {"rows": reorg})
+    worst = min(r["traffic_ratio"] for r in reorg)
+    print(f"  kv_reorg: fused moves {BS} rows instead of 2 dense cache passes "
+          f"(traffic ratio {worst:.0f}x at ctx500, grows with context); {pkv}")
     return p7
 
 

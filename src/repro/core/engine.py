@@ -184,17 +184,28 @@ class SpecEngine:
         def select_plan(tr):
             return jax.vmap(lambda t: T.select_batch(t, c.bs, S_max_t, window))(tr)
 
-        def reroot_fill(dparams, tr, dcache, node_ids, acc_pos, n_acc, bonus):
-            tr, move, fill = jax.vmap(T.reroot)(tr, node_ids, acc_pos, n_acc, bonus)
-            dcache = kvm.apply_moves(dcache, move.src, move.dst, move.mask)
-            dcache = kvm.set_length(dcache, 0)  # length bookkeeping via tree.plen
+        # the re-root is three separately-dispatched programs so the host can
+        # put a `kv_move` tracer span around exactly the cache-reorganization
+        # dispatch (the cost the fused kernels attack):
+        #   reroot   — tree bookkeeping; emits the MovePlan + FillPlan
+        #   kv_move  — apply the MovePlan to the draft cache (donating on the
+        #              committed path, snapshot-preserving on the lookahead)
+        #   fill     — forward pass for accepted-but-unexpanded prefix KV
+        def reroot(tr, node_ids, acc_pos, n_acc, bonus):
+            return jax.vmap(T.reroot)(tr, node_ids, acc_pos, n_acc, bonus)
+
+        def kv_move(dcache, src, dst, mask, *, donate):
+            dcache = kvm.apply_moves(dcache, src, dst, mask, donate=donate)
+            return kvm.set_length(dcache, 0)  # length bookkeeping via tree.plen
+
+        def fill_prefix(dparams, dcache, fill):
             # fill missing prefix KV (accepted-but-unexpanded tokens)
             cols = jnp.arange(S_max_d, dtype=jnp.int32)
             fmask = (cols[None, None, :] <= fill.rows[:, :, None]) & fill.mask[:, :, None]
             _, dcache = draft.spec_forward(
                 dparams, dcache, fill.tokens, fill.positions, fill.rows, fmask
             )
-            return tr, dcache
+            return dcache
 
         def seed(tr, root_tok, plen, root_logits):
             return jax.vmap(lambda t, tok, lg: T.seed_root(t, tok, plen, lg, c.c))(
@@ -208,25 +219,34 @@ class SpecEngine:
             acc_pos, n_acc, bonus, emitted, n_emitted = jax.vmap(T.verify_walk)(
                 tokens, parent_pos, valid, argmax
             )
-            # compact: accepted rows -> prefix  (target Fig.5 analogue)
+            # compaction plan: accepted rows -> prefix  (target Fig.5
+            # analogue); applied by the separately-dispatched _compact so the
+            # reorganization cost is visible under its own kv_move span
             bs = tokens.shape[1]
             plen = rows[:, 0] + 1  # root row = plen-1
             src = jnp.where(acc_pos >= 0, jnp.take_along_axis(rows, jnp.maximum(acc_pos, 0), axis=1), -1)
             dst = plen[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
             mmask = (jnp.arange(bs)[None, :] < n_acc[:, None]) & (src >= 0)
-            tcache = kvm.apply_moves(tcache, src, dst, mmask)
-            return acc_pos, n_acc, bonus, emitted, n_emitted, tcache
+            return acc_pos, n_acc, bonus, emitted, n_emitted, tcache, (src, dst, mmask)
+
+        def compact(tcache, src, dst, mask):
+            return kvm.apply_moves(tcache, src, dst, mask, donate=True)
 
         self._expand = jax.jit(expand, donate_argnums=(1, 2))
         self._select_plan = jax.jit(select_plan)
-        self._reroot_fill = jax.jit(reroot_fill, donate_argnums=(1, 2))
+        self._reroot = jax.jit(reroot, donate_argnums=(0,))
+        self._kv_move = jax.jit(functools.partial(kv_move, donate=True), donate_argnums=(0,))
         # async lookahead twins: the speculative re-root must NOT donate —
         # the pre-reroot (tr, dcache) snapshot stays alive as the reconcile
-        # fallback basis until the verify outcome lands on the host
-        self._spec_reroot_fill = jax.jit(reroot_fill)
+        # fallback basis until the verify outcome lands on the host (and the
+        # non-donating kv_move routes to the snapshot-preserving kernel)
+        self._spec_reroot = jax.jit(reroot)
+        self._spec_kv_move = jax.jit(functools.partial(kv_move, donate=False))
+        self._fill = jax.jit(fill_prefix, donate_argnums=(1,))
         self._predict = jax.jit(jax.vmap(T.predict_accept))
         self._seed = jax.jit(seed, static_argnums=(2,))
         self._verify = jax.jit(verify, donate_argnums=(1,))
+        self._compact = jax.jit(compact, donate_argnums=(0,))
         self._dprefill = jax.jit(lambda p, t, S: draft.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
         self._tprefill = jax.jit(lambda p, t, S: target.prefill(p, tokens=t, S_max=S), static_argnums=(2,))
         # per-slot lifecycle (continuous batching); slot/plen are traced so
@@ -376,7 +396,7 @@ class SpecEngine:
             with use_mesh(self.mesh_target):
                 out = self._verify(tparams, tcache, plan.tokens, plan.positions,
                                    plan.rows, plan.mask, plan.parent_pos, plan.valid)
-                tcache = out[-1]
+                tcache = self._compact(out[5], *out[6])
                 jax.block_until_ready(out[0])
 
         target_once()  # warm
@@ -510,10 +530,12 @@ class EngineSession:
         # --- dispatch verification on the target group (async) -------------
         with obs.span("verify_dispatch", track):
             with use_mesh(eng.mesh_target):
-                acc_pos, n_acc, bonus, emitted, n_emitted, tcache = eng._verify(
+                acc_pos, n_acc, bonus, emitted, n_emitted, tcache, mv = eng._verify(
                     self.tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
                     plan.mask, plan.parent_pos, plan.valid,
                 )
+                with obs.span("kv_move", track):
+                    tcache = eng._compact(tcache, *mv)
         # --- concurrently: d tree expansions on the draft group ------------
         if c.mode == "parallel":
             with obs.span("draft_expand", track):
@@ -529,8 +551,10 @@ class EngineSession:
         # --- re-root, fill, grow, select next batch (draft group) ----------
         with obs.span("reroot_grow", track):
             with use_mesh(eng.mesh_draft):
-                tr, dcache = eng._reroot_fill(
-                    self.dparams, tr, dcache, plan.node_ids, acc_pos, n_acc, bonus)
+                tr, move, fillp = eng._reroot(tr, plan.node_ids, acc_pos, n_acc, bonus)
+                with obs.span("kv_move", track):
+                    dcache = eng._kv_move(dcache, move.src, move.dst, move.mask)
+                dcache = eng._fill(self.dparams, dcache, fillp)
                 n_grow = c.d if c.mode == "serial" else eng.grow_per_round
                 for _ in range(n_grow):
                     tr, dcache = eng._expand(self.dparams, tr, dcache)
@@ -562,10 +586,12 @@ class EngineSession:
         plan = eng._bypass(state.plan) if eng.cfg.draft_bypass else state.plan
         span = self.tracer.begin("verify_dispatch", self.track)
         with use_mesh(eng.mesh_target):
-            acc_pos, n_acc, bonus, emitted, n_emitted, tcache = eng._verify(
+            acc_pos, n_acc, bonus, emitted, n_emitted, tcache, mv = eng._verify(
                 self.tparams, state.tcache, plan.tokens, plan.positions, plan.rows,
                 plan.mask, plan.parent_pos, plan.valid,
             )
+            with self.tracer.span("kv_move", self.track):
+                tcache = eng._compact(tcache, *mv)
         rif = RoundInFlight(
             plan=plan, tcache=tcache,
             verify=(acc_pos, n_acc, bonus, emitted, n_emitted),
@@ -592,9 +618,12 @@ class EngineSession:
                 rif.pred = eng._predict(
                     tr, rif.plan.node_ids, rif.plan.parent_pos, rif.plan.valid)
                 pred_acc, pred_n, pred_bonus = rif.pred
-                la_tr, la_dcache = eng._spec_reroot_fill(
-                    self.dparams, tr, dcache, rif.plan.node_ids,
-                    pred_acc, pred_n, pred_bonus)
+                la_tr, move, fillp = eng._spec_reroot(
+                    tr, rif.plan.node_ids, pred_acc, pred_n, pred_bonus)
+                with self.tracer.span("kv_move", self.track):
+                    # snapshot-preserving move: dcache stays alive for rollback
+                    la_dcache = eng._spec_kv_move(dcache, move.src, move.dst, move.mask)
+                la_dcache = eng._fill(self.dparams, la_dcache, fillp)
                 for _ in range(eng.grow_per_round):
                     la_tr, la_dcache = eng._expand(self.dparams, la_tr, la_dcache)
                 rif.draft_steps += eng.grow_per_round
@@ -636,8 +665,12 @@ class EngineSession:
             with obs.span("reconcile", track):
                 with use_mesh(eng.mesh_draft):
                     tr, dcache = rif.snapshot
-                    tr, dcache = eng._reroot_fill(
-                        self.dparams, tr, dcache, rif.plan.node_ids, acc_pos, n_acc, bonus)
+                    tr, move, fillp = eng._reroot(
+                        tr, rif.plan.node_ids, acc_pos, n_acc, bonus)
+                    with obs.span("kv_move", track):
+                        # actual-path move consumes the snapshot (donating)
+                        dcache = eng._kv_move(dcache, move.src, move.dst, move.mask)
+                    dcache = eng._fill(self.dparams, dcache, fillp)
                     for _ in range(eng.grow_per_round):
                         tr, dcache = eng._expand(self.dparams, tr, dcache)
                     draft_steps += eng.grow_per_round

@@ -8,6 +8,12 @@ rows are safe by construction.  Row ops touch only attention-cache leaves
 ("k"/"v"/"ckv"/"krope"); SSM states and cross-encoder KV are structurally
 exempt (chain mode / static).
 
+The row moves dispatch through ``repro.kernels.ops.kv_move_rows``: an
+index-based reference path (gather/scatter of exactly the M plan rows), or —
+under ``flags.use_pallas_kv_moves`` — the fused Pallas kernel that DMAs only
+the moved rows, O(B·M·F) HBM traffic instead of the two dense O(B·S·F)
+passes of the retired one-hot einsum formulation (docs/kernels.md).
+
 Speculative fork / rollback contract (async rounds): because every operation
 here is functional, a cache "snapshot" is just a retained reference — zero
 copies.  The async lookahead (``EngineSession.draft_next_tree``) keeps the
@@ -16,6 +22,9 @@ if the lookahead seed is rejected, ``reconcile`` simply re-applies the move
 plan to the retained reference (exact rollback), and if it commits, dropping
 the reference frees the fork.  Any new cache op must preserve this: never
 mutate a cache in place, and never donate a buffer the caller may still hold.
+``apply_moves(..., donate=True)`` is the one sanctioned exception — it tells
+the fused kernel it may alias output onto input, and is only legal inside a
+jit that donates the cache argument (the caller provably holds no reference).
 """
 
 from __future__ import annotations
@@ -23,7 +32,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import gather_rows, scatter_rows
+from repro.kernels import ops
 
 ROW_KEYS = ("k", "v", "ckv", "krope")
 
@@ -41,15 +50,16 @@ def map_row_leaves(cache, fn):
     return {"len": cache["len"], "groups": rec(cache["groups"])}
 
 
-def apply_moves(cache, src, dst, mask):
-    """src/dst/mask: [B, M] row move plan (vmapped over the layer stack)."""
+def apply_moves(cache, src, dst, mask, *, donate: bool = False):
+    """src/dst/mask: [B, M] row move plan, applied to every row leaf.
 
-    def one_layer(arr):  # arr: [B, S, ...]
-        rows = gather_rows(arr, jnp.maximum(src, 0))
-        return scatter_rows(arr, rows, dst, mask & (src >= 0))
+    ``donate=True`` permits in-place movement (fused kernel aliasing) and is
+    only legal when the wrapping jit donates the cache — see the module
+    docstring's rollback contract.
+    """
 
     def per_leaf(arr):  # [U, B, S, ...]
-        return jax.vmap(one_layer)(arr)
+        return ops.kv_move_rows(arr, src, dst, mask, donate=donate)
 
     return map_row_leaves(cache, per_leaf)
 
@@ -68,6 +78,24 @@ def set_length(cache, new_len):
 # attention K/V rows and recurrent states alike — and leave the global "len"
 # scalar alone: per-slot length bookkeeping lives in the per-row tree
 # (tree.plen); spec_forward masks are explicit and never read "len".
+#
+# Both run as ONE stacked update per call: under ``use_pallas_kv_moves`` a
+# single ``slot_write_rows`` launch DMAs one row per leaf (zeroing uses an
+# all-zeros donor cache), otherwise the XLA fallback below issues the
+# per-leaf updates inside one jitted program.  Leaves that don't fit the
+# kernel contract fall back per-call, so hybrid caches always work.
+
+
+def _write_slot_rows(cache, donor, slot, fallback):
+    """Shared install/zero body: write donor row 0 into ``slot`` of every
+    groups leaf, fused when possible, else via ``fallback(big, one)``."""
+    big_leaves, treedef = jax.tree.flatten(cache["groups"])
+    one_leaves = jax.tree.leaves(donor["groups"])
+    fused = ops.slot_write_rows(big_leaves, one_leaves, slot)
+    if fused is not None:
+        return {"len": cache["len"], "groups": jax.tree.unflatten(treedef, fused)}
+    return {"len": cache["len"],
+            "groups": jax.tree.map(fallback, cache["groups"], donor["groups"])}
 
 
 def install_slot(cache, src, slot):
@@ -77,14 +105,16 @@ def install_slot(cache, src, slot):
     def copy(big, one):
         return big.at[:, slot].set(one[:, 0].astype(big.dtype))
 
-    return {"len": cache["len"], "groups": jax.tree.map(copy, cache["groups"], src["groups"])}
+    return _write_slot_rows(cache, src, slot, copy)
 
 
 def zero_slot(cache, slot):
     """Zero batch row ``slot`` of every cache leaf (retired-slot hygiene:
     a recycled slot starts from provably clean state)."""
+    zeros = {"groups": jax.tree.map(
+        lambda x: jnp.zeros((x.shape[0], 1) + x.shape[2:], x.dtype), cache["groups"])}
 
-    def clear(x):
+    def clear(x, _z):
         return x.at[:, slot].set(jnp.zeros_like(x[:, 0]))
 
-    return {"len": cache["len"], "groups": jax.tree.map(clear, cache["groups"])}
+    return _write_slot_rows(cache, zeros, slot, clear)

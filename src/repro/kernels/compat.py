@@ -2,9 +2,16 @@
 
 ``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` in newer jax;
 every kernel imports the alias from here so the next rename lands in one
-place.
+place.  Same story for the un-blocked HBM memory space (``pltpu.ANY`` →
+``pltpu.MemorySpace.ANY``) used by the manual-DMA kernels in kv_moves.py.
 """
 
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# full-array HBM refs (no automatic HBM<->VMEM block copies; the kernel
+# issues its own DMAs).  pltpu.ANY on jax<=0.4.x, MemorySpace.ANY later.
+ANY_SPACE = getattr(pltpu, "ANY", None)
+if ANY_SPACE is None:  # pragma: no cover - newer jax
+    ANY_SPACE = pltpu.MemorySpace.ANY

@@ -17,9 +17,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.flags import get_flags
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.fused_swiglu import fused_swiglu_pallas
 from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.kv_moves import kv_move_rows_pallas, slot_write_rows_pallas
+from repro.kernels.ref import kv_move_rows_ref
 from repro.kernels.tree_attention import tree_attention_pallas
 
 
@@ -120,6 +123,60 @@ def fused_swiglu(x, wg, wu, *, interpret: bool = True):
     wup = _pad_dim(_pad_dim(wu, 0, K_p), 1, N_p)
     out = fused_swiglu_pallas(xp, wgp, wup, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return out[:T, :N]
+
+
+# -----------------------------------------------------------------------------
+# KV-reorganization row moves (cache compaction / re-root, paper §3.2)
+# -----------------------------------------------------------------------------
+# Unlike the kernels above these are NOT separately jitted: they are only
+# ever called inside the engine's already-jitted round programs, and the
+# fused/reference choice is a trace-time flag (use_pallas_kv_moves) exactly
+# like the attention kernel selection in models/attention.py.
+
+
+def kv_move_rows(arr, src, dst, mask, *, donate: bool = False):
+    """Move rows of one cache leaf: arr [U, B, S, ...]; src/dst i32 [B, M];
+    mask bool [B, M].  Parallel-assignment semantics (sources read before any
+    write); entries with mask False, src < 0, or dst < 0 are dropped.
+
+    ``donate=True`` may update in place (the fused kernel aliases its output
+    onto the input) — callers must own the buffer, i.e. the wrapping jit
+    donates the cache.  ``donate=False`` never mutates the input: the
+    speculative-lookahead contract (kv.py) requires the retained pre-reroot
+    snapshot to survive this call.
+    """
+    flags = get_flags()
+    M = src.shape[1]
+    if M == 0:
+        return arr
+    if flags.use_pallas_kv_moves:
+        U, B, S = arr.shape[:3]
+        active = (mask & (src >= 0) & (dst >= 0)).astype(jnp.int32)
+        out = kv_move_rows_pallas(
+            arr.reshape(U, B, S, -1), src, dst, active,
+            donate=donate, interpret=flags.pallas_interpret)
+        return out.reshape(arr.shape)
+    return kv_move_rows_ref(arr, src, dst, mask)
+
+
+def slot_write_rows(cache_leaves, donor_leaves, slot):
+    """Fused slot lifecycle write: donor[:, 0] -> cache[:, slot] for every
+    leaf in ONE kernel launch (vs one XLA update per leaf).  Returns the
+    updated leaves, or None when the leaves don't fit the kernel's contract
+    (shape/dtype mismatch, empty tree) — callers fall back to the per-leaf
+    XLA path, which is also the flag-off default."""
+    flags = get_flags()
+    if not flags.use_pallas_kv_moves or not cache_leaves:
+        return None
+    if len(cache_leaves) != len(donor_leaves):
+        return None
+    for big, one in zip(cache_leaves, donor_leaves):
+        if big.ndim < 2 or one.shape != (big.shape[0], 1) + big.shape[2:]:
+            return None
+        if big.dtype != one.dtype:
+            return None
+    return slot_write_rows_pallas(
+        cache_leaves, donor_leaves, slot, interpret=flags.pallas_interpret)
 
 
 # -----------------------------------------------------------------------------

@@ -57,6 +57,31 @@ def fused_swiglu_ref(x, wg, wu, bg=None, bu=None):
     return (jax.nn.silu(g) * u).astype(x.dtype)
 
 
+def kv_move_rows_ref(arr, src, dst, mask):
+    """Index-based KV row moves — oracle AND the CPU/interpret production
+    fallback for ``kv_move_rows_pallas`` (paper §3.2 reorganization).
+
+    arr: [U, B, S, ...] cache leaf; src/dst: i32 [B, M]; mask: bool [B, M].
+    Moves arr[u, b, src[b, m]] -> arr[u, b, dst[b, m]] where the combined
+    mask (mask & src >= 0 & dst >= 0) holds, as a parallel assignment: all
+    sources are read from the pre-move array before any write.
+
+    Unlike the retired one-hot einsum formulation this gathers only the M
+    plan rows (masked-off entries clamp to row 0 and are dropped at the
+    scatter via an out-of-bounds index), never the full cache — O(B·M·F)
+    work instead of two dense O(B·S·F) passes.  Active destinations are
+    distinct by MovePlan construction; duplicate destinations among masked
+    rows all map to the dropped index S.
+    """
+    U, B, S = arr.shape[:3]
+    act = mask & (src >= 0) & (dst >= 0)
+    flat = arr.reshape(U, B, S, -1)
+    rows = jnp.take_along_axis(flat, jnp.where(act, src, 0)[None, :, :, None], axis=2)
+    didx = jnp.where(act, dst, S)  # S = out of bounds -> dropped
+    out = flat.at[:, jnp.arange(B)[:, None], didx].set(rows, mode="drop")
+    return out.reshape(arr.shape)
+
+
 def int4_matmul_ref(x, qweight, scales, zeros, group_size: int):
     """AWQ groupwise int4 dequant-GEMM oracle.
 

@@ -162,7 +162,10 @@ def scatter_rows(cache, rows, row_idx, row_mask=None):
     """Write ``rows [B,n,...]`` into ``cache [B,S,...]`` at ``row_idx [B,n]``.
 
     One-hot masked scatter: O(S*n) work, no re-layout of the sequence-sharded
-    cache, duplicate/-1 indices are dropped via the mask.
+    cache, duplicate/-1 indices are dropped via the mask.  This is the
+    in-forward KV *write* path only — per-round cache reorganization
+    (verify compaction, re-root moves) goes through ``core/kv.apply_moves``
+    and the O(moved-rows) kernels in ``kernels/kv_moves.py`` instead.
     """
     B, S = cache.shape[:2]
     n = rows.shape[1]

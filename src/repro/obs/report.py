@@ -23,6 +23,12 @@ Span taxonomy (docs/observability.md):
   ├─ reconcile         async: rollback + re-root after a rejected lookahead seed
   └─ absorb            host-side token absorption / retire / stream
 
+``kv_move`` is a nested *detail* span (inside verify_dispatch, reroot_grow,
+draft_lookahead, or reconcile): the KV-reorganization dispatch that the
+fused row-move kernels attack (docs/kernels.md).  It is reported on its own
+``kv_move_s``/``kv_move_frac`` keys but deliberately kept out of
+ROUND_PHASES so the coverage/overlap unions never double-count its parent.
+
 Because async phases genuinely overlap (that is the feature), coverage and
 the overlap metrics are computed on interval *unions* per round, never by
 summing durations — a nested span can't push coverage past 1.0 or count the
@@ -40,6 +46,11 @@ PHASE_GROUPS = {
     "verify": ("verify_dispatch", "sync_emitted"),
     "absorb": ("absorb",),
 }
+# nested detail spans: measured and reported on their own keys but NEVER
+# part of the coverage/overlap unions — they live inside a ROUND_PHASES
+# parent (kv_move = the cache-reorganization dispatch inside verify_dispatch
+# / reroot_grow / draft_lookahead / reconcile; see docs/kernels.md)
+DETAIL_PHASES = ("kv_move",)
 
 
 def _merge(intervals):
@@ -85,18 +96,25 @@ def phase_breakdown(tracer) -> dict:
     rounds = sorted((s for s in spans if s.name == "round"),
                     key=lambda s: (s.track, s.t0))
     by_track: dict[str, list] = {}
+    detail_by_track: dict[str, list] = {}
     for s in spans:
         if s.name in ROUND_PHASES:
             by_track.setdefault(s.track, []).append(s)
+        elif s.name in DETAIL_PHASES:
+            detail_by_track.setdefault(s.track, []).append(s)
     for v in by_track.values():
+        v.sort(key=lambda s: s.t0)
+    for v in detail_by_track.values():
         v.sort(key=lambda s: s.t0)
 
     phase_s = dict.fromkeys(ROUND_PHASES, 0.0)
+    detail_s = dict.fromkeys(DETAIL_PHASES, 0.0)
     coverages: list[float] = []
     round_total = 0.0
     overlap_s = 0.0
     draft_union_s = 0.0
     cursor = dict.fromkeys(by_track, 0)  # per-track scan position
+    dcursor = dict.fromkeys(detail_by_track, 0)
     for r in rounds:
         round_total += r.dur
         kids_here: list = []
@@ -111,6 +129,15 @@ def phase_breakdown(tracer) -> dict:
                 phase_s[kids[i].name] += kids[i].dur
                 kids_here.append(kids[i])
             i += 1
+        dkids = detail_by_track.get(r.track, ())
+        j = dcursor.get(r.track, 0)
+        while j < len(dkids) and dkids[j].t0 < r.t0:
+            j += 1
+        dcursor[r.track] = j
+        while j < len(dkids) and dkids[j].t0 < r.t1:
+            if dkids[j].t1 <= r.t1:
+                detail_s[dkids[j].name] += dkids[j].dur
+            j += 1
         covered = _length(_merge([(k.t0, k.t1) for k in kids_here]))
         if r.dur > 0:
             coverages.append(covered / r.dur)
@@ -144,6 +171,10 @@ def phase_breakdown(tracer) -> dict:
         "draft_serialized_frac": (
             (draft_union_s - overlap_s) / round_total if round_total else nan
         ),
+        # nested detail: wall time of the KV-reorganization dispatch (the
+        # fused kv_move_rows path) across ALL round phases it nests inside
+        "kv_move_s": detail_s["kv_move"],
+        "kv_move_frac": detail_s["kv_move"] / round_total if round_total else nan,
     }
     for group, members in PHASE_GROUPS.items():
         tot = sum(phase_s[m] for m in members)
@@ -164,6 +195,8 @@ def breakdown_report(bd: dict) -> str:
     for name in ROUND_PHASES:
         lines.append(f"  {name:15s} {bd['phase_s'][name] * 1e3:9.2f} ms "
                      f"{bd['phase_frac'][name]:6.1%}")
+    lines.append(f"  {'~ kv_move':15s} {bd['kv_move_s'] * 1e3:9.2f} ms "
+                 f"{bd['kv_move_frac']:6.1%}  (nested in the phases above)")
     lines.append(
         f"  => draft {bd['draft_frac']:.1%} / verify {bd['verify_frac']:.1%} "
         f"/ absorb {bd['absorb_frac']:.1%} of round wall time"

@@ -1,4 +1,4 @@
-"""PALLAS good fixture: guarded grid, matching arities, no input writes."""
+"""PALLAS good fixture: guarded grid, matching arities, no unaliased input writes."""
 
 import jax
 from jax.experimental import pallas as pl
@@ -19,4 +19,27 @@ def good_call(x, block_m):
         in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
         out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _inplace_kernel(x_ref, o_ref):
+    # writing the input ref is sanctioned here: it is aliased onto the output
+    x_ref[...] = x_ref[...] * 2.0
+    o_ref[...] = x_ref[...]
+
+
+def good_aliased_inplace(x, block_m):
+    """Input-ref write WITH input_output_aliases declared — must stay clean
+    (the donating kv_move_rows pattern, docs/kernels.md)."""
+    m = x.shape[0]
+    if m % block_m:
+        raise ValueError(f"M={m} must be a multiple of block_m={block_m}")
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _inplace_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={0: 0},
     )(x)
