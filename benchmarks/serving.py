@@ -16,6 +16,13 @@ that saturates one replica, two replicas drain the same trace in fewer
 global rounds.  CSV: replicas, rate, finished, sustained tok/s (virtual),
 wall tok/s, TTFT p50/p99 (virtual s), per-replica mean occupancy, queue
 shed.
+
+The SLO sweep (``slo_sweep``) replays deadlined traffic — offered load x
+deadline tightness — under the fixed global draft depth and under the
+per-slot adaptive scheduler (docs/scheduling.md), on a virtual clock that
+charges per draft expansion, and asserts the adaptive policy beats fixed
+depth at saturating load on attainment or p99 TTFT.  The attainment curves
+land in ``serving.json`` (``slo_cells`` / ``slo_summary``).
 """
 
 from __future__ import annotations
@@ -31,13 +38,31 @@ from repro.core.engine import SpecConfig, SpecEngine
 from repro.data import make_request_trace
 from repro.models.api import make_model
 from repro.obs import MetricsRegistry, Tracer, breakdown_report, phase_breakdown
-from repro.serving import Request, RequestQueue, ShardedServingRuntime, VirtualClock
+from repro.serving import (
+    Request,
+    RequestQueue,
+    SchedulerConfig,
+    ShardedServingRuntime,
+    VirtualClock,
+)
 
 REPLICAS = (1, 2)
 RATES = (0.2, 1.0, 4.0)  # offered load, requests per virtual second
 N_REQUESTS = 10
 N_SLOTS = 2  # per replica
 MAX_NEW = 16
+
+# ---- SLO sweep (docs/scheduling.md): offered load x deadline tightness,
+# fixed global depth vs per-slot adaptive depth.  The virtual clock charges
+# ``expand_dt`` per draft expansion the round actually ran, so shallower
+# adaptive rounds are measurably cheaper — the cost model under which the
+# scheduler has to earn its attainment/p99 win (byte-identity of outputs is
+# asserted separately in tests/test_scheduler.py; here only timing differs).
+SLO_RATES = (1.0, 4.0)  # req / virtual s; max saturates one 2-slot replica
+SLO_DEADLINES = (3.0, 10.0)  # finish deadline, virtual s after arrival
+SLO_FIXED_D = 4  # the global depth the adaptive policy competes against
+SLO_ROUND_DT = 0.1
+SLO_EXPAND_DT = 0.05  # a depth-4 round costs 0.3 vs 0.15 at depth 1
 
 
 def _build():
@@ -66,6 +91,62 @@ def _warmup(eng, tp, dp, cfgT) -> None:
         prompt = rng.integers(0, cfgT.vocab_size, size=(P,), dtype=np.int32)
         rt.submit(Request(rid=i, prompt=prompt, arrival_s=0.0, max_new=4))
     rt.run()
+
+
+def slo_sweep(eng, tp, dp, cfgT):
+    """offered load x deadline tightness x {fixed d, adaptive} -> SLO curves.
+
+    Returns (cells, summary): per-cell attainment / slack / TTFT rows plus
+    the saturating-load comparison the trajectory tracks."""
+    import dataclasses
+
+    deep = SpecEngine(eng.target, eng.draft,
+                      dataclasses.replace(eng.cfg, d=SLO_FIXED_D),
+                      S_max_t=256, S_max_d=256)
+    cells = []
+    att = {}  # (rate, deadline, policy) -> (attainment, ttft_p99)
+    for rate in SLO_RATES:
+        for ddl in SLO_DEADLINES:
+            for policy, sched in (("fixed", None), ("adaptive", SchedulerConfig())):
+                trace = make_request_trace(cfgT.vocab_size, N_REQUESTS,
+                                           rate_rps=rate, prompt_len=(8, 16),
+                                           max_new=MAX_NEW, seed=7)
+                rt = ShardedServingRuntime(
+                    [deep], tp, dp, n_slots=N_SLOTS,
+                    queue=RequestQueue(cap=2 * N_REQUESTS),
+                    clock=VirtualClock(round_dt=SLO_ROUND_DT,
+                                       expand_dt=SLO_EXPAND_DT),
+                    scheduler=sched,
+                )
+                rt.submit_trace(
+                    Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s,
+                            max_new=r.max_new, deadline_s=r.arrival_s + ddl)
+                    for r in trace)
+                rt.run()
+                s = rt.summary()
+                att[(rate, ddl, policy)] = (s["slo_attainment"], s["ttft_p99_s"])
+                cells.append({
+                    "offered_rate_rps": rate, "deadline_s": ddl,
+                    "policy": policy, "n_deadlined": s["n_deadlined"],
+                    "slo_attainment": round(s["slo_attainment"], 3),
+                    "slack_p50_s": round(s["slack_p50_s"], 3),
+                    "slack_p10_s": round(s["slack_p10_s"], 3),
+                    "ttft_p99_s": round(s["ttft_p99_s"], 3),
+                    "sustained_tok_s": round(s["throughput_tok_s"], 2),
+                })
+                print(f"  slo: rate={rate:4.1f}/s deadline={ddl:4.1f}s "
+                      f"{policy:8s} attain={s['slo_attainment']:.2f} "
+                      f"slack p50={s['slack_p50_s']:+.2f} "
+                      f"ttft p99={s['ttft_p99_s']:.3f}")
+    sat, tight = max(SLO_RATES), min(SLO_DEADLINES)
+    f_att, f_p99 = att[(sat, tight, "fixed")]
+    a_att, a_p99 = att[(sat, tight, "adaptive")]
+    summary = {
+        "saturating_rate_rps": sat, "tight_deadline_s": tight,
+        "fixed_attainment": f_att, "adaptive_attainment": a_att,
+        "fixed_ttft_p99_s": f_p99, "adaptive_ttft_p99_s": a_p99,
+    }
+    return cells, summary
 
 
 def run() -> None:
@@ -133,6 +214,9 @@ def run() -> None:
     a_rt.run()
     a_bd = phase_breakdown(a_tracer)
 
+    # SLO sweep: deadline attainment under fixed vs adaptive draft depth
+    slo_cells, slo_summary = slo_sweep(eng, tp, dp, cfgT)
+
     # BENCH JSON: the sweep cells plus the measured round-time decomposition
     # (draft vs verify fraction — the paper's imbalance) for the trajectory.
     # accept_depth_mean merges the per-replica histogram family (replicas may
@@ -156,6 +240,8 @@ def run() -> None:
         "async_overlap_draft_verify_s": a_bd["overlap_draft_verify_s"],
         "async_draft_serialized_frac": a_bd["draft_serialized_frac"],
         "lockstep_draft_serialized_frac": bd["draft_serialized_frac"],
+        "slo_cells": slo_cells,
+        "slo_summary": slo_summary,
     })
     print(breakdown_report(bd))
     print(f"  async: draft overlapped verify {a_bd['overlap_draft_verify_s']*1e3:.1f} ms, "
@@ -167,6 +253,14 @@ def run() -> None:
     sat = max(RATES)  # saturating load: the sharding payoff must show
     assert sustained[(2, sat)] > sustained[(1, sat)], (
         f"2 replicas did not out-serve 1 at rate {sat}: {sustained}")
+    # adaptive depth must beat the fixed global d at saturating load on
+    # attainment or p99 TTFT (shallower rounds are cheaper under the
+    # expand_dt cost model; outputs are identical, only timing moves)
+    ss = slo_summary
+    assert (ss["adaptive_attainment"] > ss["fixed_attainment"]
+            or ss["adaptive_ttft_p99_s"] < ss["fixed_ttft_p99_s"]), (
+        f"adaptive depth did not beat fixed d={SLO_FIXED_D} at saturating "
+        f"load: {ss}")
 
 
 if __name__ == "__main__":

@@ -138,6 +138,18 @@ class RoundInFlight:
     verify_span: Any = NOOP_SPAN  # open until the reconcile sync (verify window)
 
 
+def _effective_depth(depth: int | None, default: int) -> int:
+    """Resolve a round's draft depth: a concrete Python int (a host-side
+    loop trip count — never traced) with ``None`` meaning the config's
+    global ``d``."""
+    if depth is None:
+        return default
+    d = int(depth)
+    if d < 1:
+        raise ValueError(f"draft depth must be >= 1, got {depth}")
+    return d
+
+
 def absorb_emitted(out: list, emitted_row, n_emitted: int, max_new: int, eos_id: int):
     """Append one row's verified tokens to ``out`` until EOS or ``max_new``.
 
@@ -504,11 +516,23 @@ class EngineSession:
     # ------------------------------------------------------------------
     # the round, lockstep
     # ------------------------------------------------------------------
-    def step(self, stats: SpecStats | None = None) -> StepResult:
+    def step(self, stats: SpecStats | None = None,
+             depth: int | None = None) -> StepResult:
         """One round for every slot.  With ``async_rounds`` this is the
         degenerate pipeline (begin + reconcile back-to-back — same tokens,
         no cross-replica overlap); the serving runtime splits the two calls
         to keep one verify and one draft outstanding per replica.
+
+        ``depth`` is the round's effective draft depth — how many tree
+        expansions this round runs — as a plain Python int (None: the
+        config's global ``d``).  It is a loop trip count on the host, never
+        a traced value, so varying it round to round compiles nothing new:
+        the jitted ``_expand`` program is shared by every depth.  Depth only
+        changes how much of the greedy continuation each round verifies
+        (the adaptive-depth scheduler's lever); the emitted stream itself is
+        depth-invariant — greedy verification pins it to target-only greedy
+        decoding (tests/test_scheduler.py asserts byte-identity under
+        arbitrary per-round depth schedules).
 
         Rows at different decode depths coexist: all per-row quantities
         (prefix length, masks, acceptance) live in the vmapped tree, so the
@@ -520,10 +544,11 @@ class EngineSession:
         draft_lookahead / reconcile on the async path) on ``track`` (one
         track per serving replica); the default NULL_TRACER path is free."""
         if self.engine.cfg.async_rounds:
-            return self.reconcile(self.begin_round(), stats=stats)
+            return self.reconcile(self.begin_round(depth=depth), stats=stats)
         self._check_quiescent("step")
         eng, obs, track = self.engine, self.tracer, self.track
         c, state = eng.cfg, self.state
+        d_eff = _effective_depth(depth, c.d)
         plan = eng._bypass(state.plan) if c.draft_bypass else state.plan
         tr, dcache = state.tr, state.dcache
         draft_steps = 0
@@ -540,9 +565,9 @@ class EngineSession:
         if c.mode == "parallel":
             with obs.span("draft_expand", track):
                 with use_mesh(eng.mesh_draft):
-                    for _ in range(c.d):
+                    for _ in range(d_eff):
                         tr, dcache = eng._expand(self.dparams, tr, dcache)
-                    draft_steps += c.d
+                    draft_steps += d_eff
         # --- sync point: verified tokens cross groups (host-mediated) ------
         with obs.span("sync_emitted", track):
             # the round's ONE designated host sync: the verified-token
@@ -555,7 +580,7 @@ class EngineSession:
                 with obs.span("kv_move", track):
                     dcache = eng._kv_move(dcache, move.src, move.dst, move.mask)
                 dcache = eng._fill(self.dparams, dcache, fillp)
-                n_grow = c.d if c.mode == "serial" else eng.grow_per_round
+                n_grow = d_eff if c.mode == "serial" else eng.grow_per_round
                 for _ in range(n_grow):
                     tr, dcache = eng._expand(self.dparams, tr, dcache)
                 draft_steps += n_grow
@@ -569,11 +594,12 @@ class EngineSession:
     # ------------------------------------------------------------------
     # the round, disaggregated (async_rounds)
     # ------------------------------------------------------------------
-    def begin_round(self) -> RoundInFlight:
+    def begin_round(self, depth: int | None = None) -> RoundInFlight:
         """Dispatch one full round without syncing: verify on the target
-        group, then the speculative next-round draft on the draft group."""
+        group, then the speculative next-round draft on the draft group.
+        ``depth``: this round's effective draft depth (see ``step``)."""
         rif = self.dispatch_verify()
-        return self.draft_next_tree(rif)
+        return self.draft_next_tree(rif, depth=depth)
 
     def dispatch_verify(self) -> RoundInFlight:
         """Enqueue this round's target verification; return the in-flight
@@ -600,19 +626,23 @@ class EngineSession:
         self._inflight = rif
         return rif
 
-    def draft_next_tree(self, rif: RoundInFlight) -> RoundInFlight:
-        """While verify runs: finish this round's d expansions, predict the
-        accept path (``tree.predict_accept``), and draft round N+1's tree on
-        the predicted-accept seed — the paper's draft-ahead.  The pre-reroot
+    def draft_next_tree(self, rif: RoundInFlight,
+                        depth: int | None = None) -> RoundInFlight:
+        """While verify runs: finish this round's expansions (``depth`` of
+        them — the round's effective draft depth, a host loop count; None
+        means the config's global ``d``), predict the accept path
+        (``tree.predict_accept``), and draft round N+1's tree on the
+        predicted-accept seed — the paper's draft-ahead.  The pre-reroot
         (tr, dcache) snapshot is retained (the speculative re-root does not
         donate), so ``reconcile`` can roll back a rejected seed exactly."""
         eng, c = self.engine, self.engine.cfg
+        d_eff = _effective_depth(depth, c.d)
         tr, dcache = self.state.tr, self.state.dcache
         with self.tracer.span("draft_lookahead", self.track):
             with use_mesh(eng.mesh_draft):
-                for _ in range(c.d):
+                for _ in range(d_eff):
                     tr, dcache = eng._expand(self.dparams, tr, dcache)
-                rif.draft_steps += c.d
+                rif.draft_steps += d_eff
                 # post-expansion, pre-reroot: the rollback point
                 rif.snapshot = (tr, dcache)
                 rif.pred = eng._predict(

@@ -21,6 +21,10 @@ continuous runtime over N SpecEngine replicas on disjoint device groups
 round N verifies, reconciling on a rejected lookahead seed — outputs stay
 byte-identical to lockstep, and the traced ``draft_lookahead`` /
 ``verify_dispatch`` overlap in the phase breakdown is the evidence.
+``--adaptive-depth`` turns on per-slot adaptive draft depth and
+``--deadline-s X`` stamps every request with a finish deadline X seconds
+after its arrival — EDF queueing, slack-aware routing, and an SLO
+attainment report (docs/scheduling.md); outputs stay byte-identical.
 ``--trace-out trace.json --metrics-out metrics.json`` records per-round
 phase spans (draft expand / verify / sync / reroot / absorb — viewable in
 ui.perfetto.dev) and a metrics snapshot with the round-time decomposition
@@ -95,11 +99,12 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
     the draft/verify/absorb round decomposition land in the metrics JSON."""
     from repro.obs import MetricsRegistry, Tracer, breakdown_report, phase_breakdown
     from repro.serving import (ContinuousBatchingRuntime, Request, RequestQueue,
-                               ShardedServingRuntime, WallClock)
+                               SchedulerConfig, ShardedServingRuntime, WallClock)
 
     observed = bool(args.trace_out or args.metrics_out)
     tracer = Tracer() if observed else None
     metrics = MetricsRegistry() if observed else None
+    scheduler = SchedulerConfig() if args.adaptive_depth else None
 
     trace = make_request_trace(
         cfgT.vocab_size, args.requests, rate_rps=args.rate,
@@ -110,22 +115,25 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
         rt = ShardedServingRuntime(
             engines, tp, dp, n_slots=args.slots,
             queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
-            tracer=tracer, metrics=metrics,
+            tracer=tracer, metrics=metrics, scheduler=scheduler,
         )
         label = f"{len(engines)} replicas x {args.slots} slots"
     else:
         rt = ContinuousBatchingRuntime(
             engines, tp, dp, n_slots=args.slots,
             queue=RequestQueue(cap=args.queue_cap), clock=WallClock(),
-            tracer=tracer, metrics=metrics,
+            tracer=tracer, metrics=metrics, scheduler=scheduler,
         )
         label = f"{args.slots} slots"
     accepted = rt.submit_trace(
-        Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new)
+        Request(rid=r.rid, prompt=r.prompt, arrival_s=r.arrival_s, max_new=r.max_new,
+                deadline_s=(r.arrival_s + args.deadline_s) if args.deadline_s else None)
         for r in trace
     )
     print(f"continuous: {accepted}/{len(trace)} requests accepted "
-          f"({label}, Poisson rate {args.rate}/s, queue cap {args.queue_cap})")
+          f"({label}, Poisson rate {args.rate}/s, queue cap {args.queue_cap}"
+          + (f", deadline {args.deadline_s}s" if args.deadline_s else "")
+          + (", adaptive depth" if scheduler else "") + ")")
     t0 = monotonic()
     results = rt.run()
     wall = monotonic() - t0
@@ -133,6 +141,12 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
     total = sum(len(v) for v in results.values())
     print(f"wall: {total} tokens in {wall:.1f}s ({total/wall:.1f} tok/s incl. compile); "
           f"{rt.queue.rejected} shed by admission control")
+
+    summary = rt.summary() if isinstance(engines, list) else rt.stats.summary()
+    if summary["n_deadlined"]:
+        print(f"SLO: {summary['slo_attainment']:.0%} of {summary['n_deadlined']} "
+              f"deadlined requests met (slack p50 {summary['slack_p50_s']:+.3f}s "
+              f"p10 {summary['slack_p10_s']:+.3f}s)")
 
     if observed:
         bd = phase_breakdown(tracer)
@@ -143,7 +157,10 @@ def run_continuous(args, engines, tp, dp, cfgT) -> None:
             path = tracer.write(args.trace_out)
             print(f"trace -> {path} (open in ui.perfetto.dev or chrome://tracing)")
         if args.metrics_out:
-            path = metrics.write(args.metrics_out, extra={"phase_breakdown": bd})
+            slo = {k: summary[k] for k in ("n_deadlined", "slo_attainment",
+                                           "slack_p50_s", "slack_p10_s")}
+            path = metrics.write(args.metrics_out,
+                                 extra={"phase_breakdown": bd, "slo": slo})
             print(f"metrics -> {path}")
 
     if args.verify:
@@ -191,6 +208,15 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=2, help="continuous: engine batch slots")
     ap.add_argument("--rate", type=float, default=2.0, help="continuous: Poisson arrival rate (req/s)")
     ap.add_argument("--queue-cap", type=int, default=64, help="continuous: admission-control queue cap")
+    ap.add_argument("--adaptive-depth", action="store_true",
+                    help="continuous: per-slot adaptive draft depth — each "
+                         "slot's measured-acceptance EMA picks a depth bucket; "
+                         "the round runs at the max over occupied slots "
+                         "(docs/scheduling.md; outputs stay byte-identical)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="continuous: per-request finish deadline, seconds "
+                         "after arrival (0 = best-effort); enables EDF "
+                         "queueing, slack-aware routing, and SLO reporting")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
                     help="continuous: skip byte-identical check vs solo generate()")
     ap.add_argument("--trace-out", default=None,

@@ -140,6 +140,13 @@ class MetricsRegistry:
         fam = self._m["histogram"].get(name, {})
         return [(dict(key), h) for key, h in sorted(fam.items())]
 
+    def series_family(self, name: str) -> list[tuple[dict, Series]]:
+        """Every (labels, series) pair registered under ``name`` — e.g. the
+        per-replica ``serving_round_depth`` family.  Read-only: does not
+        create."""
+        fam = self._m["series"].get(name, {})
+        return [(dict(key), s) for key, s in sorted(fam.items())]
+
     # ---- export ----------------------------------------------------------
     def snapshot(self) -> dict:
         """Structured dump of every metric (the ``--metrics-out`` payload)."""

@@ -11,11 +11,20 @@ one engine or across N engine replicas on disjoint device groups.
 Modules
 -------
 ``queue``
-    ``Request`` and ``RequestQueue`` — FIFO with admission control: a hard
-    queue cap (load shedding) and arrival-time gating so a seeded Poisson
-    trace (``repro.data.make_request_trace``) replays like live traffic.
-    Both admission gates (cap and prompt-length bound) adjudicate at
-    ARRIVAL time; ``depth()`` is O(1) via an arrived/future split.
+    ``Request`` and ``RequestQueue`` — admission control plus a deadline-
+    aware pop: a hard queue cap (load shedding), arrival-time gating so a
+    seeded Poisson trace (``repro.data.make_request_trace``) replays like
+    live traffic, and EDF selection among arrived requests — ``(priority,
+    deadline, FIFO)`` with a ``starvation_s`` bound — that degenerates to
+    exact FIFO when nothing carries a deadline.  Both admission gates (cap
+    and prompt-length bound) adjudicate at ARRIVAL time; ``depth()`` is
+    O(1) via an arrived/future split.
+``scheduler``
+    ``SchedulerConfig`` / ``AdaptiveDepthController`` — per-slot adaptive
+    draft depth: each slot's measured-acceptance EMA maps to a depth bucket
+    (one host loop count over the single jitted expand program — no new jit
+    traces), and the round runs at the max bucket over occupied slots.
+    Adaptation changes when tokens verify, never which tokens.
 ``runtime``
     ``EngineStepper`` — the per-engine admit/absorb/retire loop over one
     ``SpecEngine`` state: solo prefill installed into a free slot's KV rows
@@ -75,6 +84,7 @@ from repro.serving.runtime import (
     VirtualClock,
     WallClock,
 )
+from repro.serving.scheduler import AdaptiveDepthController, SchedulerConfig
 from repro.serving.stats import (
     RequestRecord,
     ServerStats,
@@ -84,9 +94,11 @@ from repro.serving.stats import (
 )
 
 __all__ = [
+    "AdaptiveDepthController",
     "ContinuousBatchingRuntime",
     "EngineStepper",
     "Request",
+    "SchedulerConfig",
     "RequestQueue",
     "RequestRecord",
     "ServerStats",

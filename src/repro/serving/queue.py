@@ -1,6 +1,6 @@
 """Request queue with admission control for the continuous-batching runtime.
 
-FIFO in arrival order, with two admission gates:
+Arrival-ordered, with two admission gates:
   * a hard queue cap (``cap``): submissions beyond it are rejected at the
     door (counted in ``rejected``) instead of growing an unbounded backlog —
     the load-shedding half of admission control;
@@ -8,13 +8,23 @@ FIFO in arrival order, with two admission gates:
     clock has reached its ``arrival_s`` (replaying a recorded/Poisson trace
     behaves like live traffic).
 
-Internally the queue is two deques: ``_ready`` (requests whose arrival time
-is at or before the highest ``now`` seen so far) and ``_future`` (not yet
-arrived).  Because submissions are arrival-ordered, every ``_future`` entry
-arrives after every ``_ready`` entry, so popping ``_ready``'s head is always
-globally FIFO and ``depth()`` is just ``len(_ready)`` — O(1) for the
-monotonic clocks the runtimes use (each request crosses the boundary exactly
-once), instead of rescanning the whole backlog every round.
+The pop is deadline-aware (docs/scheduling.md): among ARRIVED requests,
+``pop_ready`` picks by ``(priority, deadline, insertion order)`` — earliest
+deadline first within a priority class, deadline-free requests last in
+theirs, FIFO tie-break — so a tight-SLO arrival overtakes a best-effort
+backlog.  A pure EDF pop can starve deadline-free work behind a steady
+deadlined stream, so ``starvation_s`` bounds it: once the oldest arrived
+request has waited that long, it pops next regardless of everyone else's
+deadlines.  With no deadlines and no priorities the pop degenerates to
+exact FIFO (the pre-scheduling behavior).
+
+Internally the queue is an arrived list plus a future deque: ``_ready``
+(requests whose arrival time is at or before the highest ``now`` seen so
+far, in insertion order) and ``_future`` (not yet arrived).  Because
+submissions are arrival-ordered, every ``_future`` entry arrives after
+every ``_ready`` entry, so ``depth()`` is just ``len(_ready)`` — O(1) for
+the monotonic clocks the runtimes use (each request crosses the boundary
+exactly once) — and the EDF scan touches only the arrived backlog.
 """
 
 from __future__ import annotations
@@ -27,13 +37,21 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt plus per-request decode limits."""
+    """One serving request: a prompt plus per-request decode limits and SLO.
+
+    ``deadline_s`` is an absolute point on the serving timeline (same clock
+    as ``arrival_s``) by which the request should FINISH; None means
+    best-effort.  ``priority`` orders pops before deadlines do — lower is
+    more urgent (0 is the default class) — so an operator can pin
+    interactive traffic ahead of batch traffic outright."""
 
     rid: int
     prompt: np.ndarray  # i32[P]
     arrival_s: float = 0.0
     max_new: int | None = None  # None: inherit the engine's max_new
     eos_id: int | None = None  # None: inherit the engine's eos_id; -1: never stop
+    deadline_s: float | None = None  # absolute finish deadline; None: best-effort
+    priority: int = 0  # lower pops first; ties fall through to EDF
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -41,12 +59,26 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new is not None and self.max_new <= 0:
             raise ValueError(f"request {self.rid}: max_new must be positive")
+        if self.deadline_s is not None and self.deadline_s < self.arrival_s:
+            raise ValueError(
+                f"request {self.rid}: deadline_s {self.deadline_s} precedes "
+                f"arrival_s {self.arrival_s}")
+
+    @property
+    def edf_deadline(self) -> float:
+        """The EDF sort key: best-effort requests order after any deadline."""
+        return self.deadline_s if self.deadline_s is not None else float("inf")
 
 
 class RequestQueue:
-    def __init__(self, cap: int = 64):
+    def __init__(self, cap: int = 64, starvation_s: float | None = None):
+        if starvation_s is not None and starvation_s <= 0:
+            raise ValueError(f"starvation_s must be positive, got {starvation_s}")
         self.cap = cap
-        self._ready: collections.deque[Request] = collections.deque()
+        # EDF starvation bound: once the oldest arrived request has waited
+        # this long, it wins the pop regardless of deadlines (None: pure EDF)
+        self.starvation_s = starvation_s
+        self._ready: list[Request] = []  # arrived, in insertion (FIFO) order
         self._future: collections.deque[Request] = collections.deque()
         self.submitted = 0
         self.rejected = 0
@@ -91,13 +123,29 @@ class RequestQueue:
         return True
 
     def pop_ready(self, now: float) -> Request | None:
-        """Next request whose arrival time has passed, or None."""
+        """Deadline-aware priority pop over the ARRIVED backlog, or None.
+
+        Selection key: ``(priority, deadline, insertion order)`` — EDF
+        within a priority class, best-effort (deadline-free) requests last
+        in theirs, FIFO tie-break — which is exact FIFO when nothing
+        carries a deadline or priority.  Starvation bound: with
+        ``starvation_s`` set, an oldest-arrived request that has waited at
+        least that long pops first unconditionally, so a steady deadlined
+        stream cannot park best-effort work forever."""
         self._advance(now)
-        # the watermark may sit ahead of a non-monotonic probe: re-check the
-        # head's arrival against THIS ``now`` so gating stays exact
-        if self._ready and self._ready[0].arrival_s <= now:
-            return self._ready.popleft()
-        return None
+        # the watermark may sit ahead of a non-monotonic probe: re-check each
+        # entry's arrival against THIS ``now`` so gating stays exact
+        arrived = [i for i, r in enumerate(self._ready) if r.arrival_s <= now]
+        if not arrived:
+            return None
+        oldest = arrived[0]  # insertion order == arrival order for traces
+        if (self.starvation_s is not None
+                and now - self._ready[oldest].arrival_s >= self.starvation_s):
+            return self._ready.pop(oldest)
+        best = min(arrived,
+                   key=lambda i: (self._ready[i].priority,
+                                  self._ready[i].edf_deadline, i))
+        return self._ready.pop(best)
 
     def next_arrival(self) -> float | None:
         """Arrival time of the head request (None when empty)."""

@@ -56,7 +56,8 @@ class ShardedServingRuntime(ServingRuntimeBase):
                  clock=None,
                  stream: Callable[[int, list, bool], None] | None = None,
                  tracer=None,
-                 metrics=None):
+                 metrics=None,
+                 scheduler=None):
         if not engines:
             raise ValueError("need at least one engine replica")
         self._init_admission(queue, clock, tracer, metrics)
@@ -68,7 +69,8 @@ class ShardedServingRuntime(ServingRuntimeBase):
             EngineStepper(eng, tp, dp, n_slots,
                           stats=ServerStats(), stream=stream,
                           results=self.results, replica=i,
-                          tracer=self.tracer, metrics=self.metrics)
+                          tracer=self.tracer, metrics=self.metrics,
+                          scheduler=scheduler)
             for i, (eng, tp, dp) in enumerate(zip(engines, tps, dps))
         ])
 

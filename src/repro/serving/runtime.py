@@ -40,6 +40,11 @@ from repro.obs.clock import monotonic
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NOOP_SPAN, NULL_TRACER
 from repro.serving.queue import Request, RequestQueue
+from repro.serving.scheduler import (
+    AdaptiveDepthController,
+    SchedulerConfig,
+    deadline_slack,
+)
 from repro.serving.stats import ServerStats
 
 # accepted-depth histogram bucket for "replica admitted/finished" style
@@ -60,8 +65,8 @@ class WallClock:
         jit compiles don't consume the trace's arrival schedule)."""
         self._t0 = monotonic()
 
-    def on_round(self) -> None:  # real time advances by itself
-        pass
+    def on_round(self, depth: int | None = None) -> None:
+        pass  # real time advances by itself
 
     def wait_until(self, t: float) -> None:
         d = t - self.now()
@@ -70,11 +75,17 @@ class WallClock:
 
 
 class VirtualClock:
-    """Deterministic clock: ``round_dt`` virtual seconds per engine round."""
+    """Deterministic clock: ``round_dt`` virtual seconds per engine round,
+    plus ``expand_dt`` per draft-tree expansion the round actually ran —
+    the cost model that makes adaptive draft depth *measurable* on the
+    virtual timeline (a depth-1 round is cheaper than a depth-4 round, as
+    on hardware where each expansion is a serialized draft forward pass).
+    ``expand_dt=0`` (the default) keeps the legacy fixed-cost rounds."""
 
-    def __init__(self, round_dt: float = 1.0):
+    def __init__(self, round_dt: float = 1.0, expand_dt: float = 0.0):
         self._t = 0.0
         self.round_dt = round_dt
+        self.expand_dt = expand_dt
 
     def now(self) -> float:
         return self._t
@@ -82,8 +93,8 @@ class VirtualClock:
     def reset(self) -> None:
         self._t = 0.0
 
-    def on_round(self) -> None:
-        self._t += self.round_dt
+    def on_round(self, depth: int | None = None) -> None:
+        self._t += self.round_dt + (self.expand_dt * depth if depth else 0.0)
 
     def wait_until(self, t: float) -> None:
         self._t = max(self._t, t)
@@ -119,7 +130,8 @@ class EngineStepper:
                  results: dict | None = None,
                  replica: int = 0,
                  tracer=None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 scheduler: SchedulerConfig | None = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.engine, self.tparams, self.dparams = engine, tparams, dparams
@@ -159,6 +171,18 @@ class EngineStepper:
                                    replica=rep)
         self._m_occupancy = m.series("serving_occupancy", replica=rep)
         self._m_spec_commits = m.counter("serving_spec_commits_total", replica=rep)
+        self._m_depth = m.series("serving_round_depth", replica=rep)
+        # ---- adaptive draft depth (repro.serving.scheduler): per-slot
+        # acceptance EMAs seeded from the accept-depth histogram above; None
+        # keeps the engine's fixed global d (the pre-scheduler behavior)
+        self.depth_ctl = None
+        if scheduler is not None:
+            self.depth_ctl = AdaptiveDepthController(
+                scheduler, n_slots, default_depth=engine.cfg.d,
+                seed_hist=self._m_accept)
+        # the depth the most recent step() ran at (the round's cost driver,
+        # read by the fleet loop's clock and the round-depth series)
+        self.last_round_depth = engine.cfg.d
 
     # ------------------------------------------------------------------
     @property
@@ -183,6 +207,12 @@ class EngineStepper:
         """Occupancy fraction in [0, 1] — the routing signal."""
         return self.occupied / self.n_slots
 
+    def deadline_slack(self, now: float) -> float:
+        """Tightest remaining deadline slack across this replica's occupied
+        slots (+inf when none is deadlined) — the router's SLO-pressure
+        tie-break (see ``ServingRuntimeBase._route``)."""
+        return deadline_slack(self.slots, now)
+
     # ------------------------------------------------------------------
     def admit(self, req: Request, now: float) -> int:
         """Install ``req`` into the first free slot; returns the slot.  The
@@ -195,7 +225,10 @@ class EngineStepper:
                                     "plen": int(req.prompt.size)}):
             self.session.admit_slot(slot, req.prompt)
         self.slots[slot] = _Active(req=req, plen=int(req.prompt.size))
-        self.stats.on_admit(req.rid, slot, req.arrival_s, now, replica=self.replica)
+        self.stats.on_admit(req.rid, slot, req.arrival_s, now, replica=self.replica,
+                            deadline_s=req.deadline_s, priority=req.priority)
+        if self.depth_ctl is not None:
+            self.depth_ctl.seed_slot(slot)
         self._m_admitted.inc()
         return slot
 
@@ -207,38 +240,79 @@ class EngineStepper:
         other replicas (the two-stage pipeline: one verify and one draft
         outstanding per replica) until ``absorb_round`` reconciles it.
 
-        Opens this replica's ``round`` span; ``absorb_round`` closes it, so
-        the span brackets dispatch through absorption — the engine's phase
-        spans (verify/draft/sync/reroot) plus ``absorb`` are its children."""
+        With an adaptive-depth scheduler bound, the round's effective depth
+        is the controller's decision for the CURRENT occupancy (max depth
+        bucket over occupied slots' acceptance EMAs); otherwise the engine's
+        fixed global ``d``.  Either way ``last_round_depth`` records it for
+        the fleet clock's cost model and the round-depth series.
+
+        Opens this replica's ``round`` span; ``absorb_round`` closes it (or
+        ``abort_round`` on a failed fleet turn), so the span brackets
+        dispatch through absorption — the engine's phase spans
+        (verify/draft/sync/reroot) plus ``absorb`` are its children."""
         self._round_span = self.tracer.begin("round", self.track)
-        if self.engine.cfg.async_rounds:
-            return self.session.begin_round()
-        return self.session.step(stats=self.spec_stats)
+        try:
+            depth = None
+            if self.depth_ctl is not None:
+                depth = self.depth_ctl.round_depth(
+                    [s is not None for s in self.slots])
+            self.last_round_depth = self.engine.cfg.d if depth is None else depth
+            self._round_span.set("depth", self.last_round_depth)
+            if self.engine.cfg.async_rounds:
+                return self.session.begin_round(depth=depth)
+            return self.session.step(stats=self.spec_stats, depth=depth)
+        except BaseException:
+            # a failed dispatch must not leak the open round span
+            self._round_span.end()
+            self._round_span = NOOP_SPAN
+            raise
 
     def absorb_round(self, res, now: float) -> None:
         """Fold one round's outcome into every occupied slot, retiring the
         rows that finished (EOS / max_new / cache budget).  An in-flight
         async round is reconciled here — prediction mismatches on
         unoccupied rows are ignored (``live`` mask), since parked trees
-        never reach verification and admission overwrites the row."""
-        if isinstance(res, RoundInFlight):
-            pre = self.spec_stats.spec_commits
-            res = self.session.reconcile(
-                res, stats=self.spec_stats,
-                live=[s is not None for s in self.slots])
-            if self.spec_stats.spec_commits > pre:
-                self._m_spec_commits.inc()
-        self._m_occupancy.append(now, self.occupied)  # pre-retire, as stats does
-        with self.tracer.span("absorb", self.track):
-            for slot, act in enumerate(self.slots):
-                if act is None:
-                    continue
-                self._absorb(slot, act, res, now)
-                if act.done:
-                    self._retire(slot, act, now)
-        self._m_rounds.inc()
-        self._round_span.end()
-        self._round_span = NOOP_SPAN
+        never reach verification and admission overwrites the row.
+
+        The round span closes via try/finally: an absorb that raises (a
+        failing stream callback, a poisoned record) must leave the tracer
+        balanced, not with this replica's round span open forever."""
+        try:
+            if isinstance(res, RoundInFlight):
+                pre = self.spec_stats.spec_commits
+                res = self.session.reconcile(
+                    res, stats=self.spec_stats,
+                    live=[s is not None for s in self.slots])
+                if self.spec_stats.spec_commits > pre:
+                    self._m_spec_commits.inc()
+            self._m_occupancy.append(now, self.occupied)  # pre-retire, as stats does
+            self._m_depth.append(now, self.last_round_depth)
+            with self.tracer.span("absorb", self.track):
+                for slot, act in enumerate(self.slots):
+                    if act is None:
+                        continue
+                    self._absorb(slot, act, res, now)
+                    if act.done:
+                        self._retire(slot, act, now)
+            self._m_rounds.inc()
+        finally:
+            self._round_span.end()
+            self._round_span = NOOP_SPAN
+
+    def abort_round(self, res) -> None:
+        """Abandon a dispatched round whose ``absorb_round`` will never run
+        (another replica's absorb raised and the fleet loop is unwinding).
+        An in-flight async round is reconciled and its result discarded —
+        the session's buffers were donated into the round, so dropping the
+        ``RoundInFlight`` on the floor would orphan the session — and the
+        open round span is closed so the tracer stays balanced."""
+        try:
+            if isinstance(res, RoundInFlight):
+                self.session.reconcile(
+                    res, live=[s is not None for s in self.slots])
+        finally:
+            self._round_span.end()
+            self._round_span = NOOP_SPAN
 
     def _absorb(self, slot: int, act: _Active, res, now: float) -> None:
         """Append one StepResult row's verified tokens up to EOS/max_new,
@@ -255,6 +329,8 @@ class EngineStepper:
         first = self.stats.records[act.req.rid].first_token_s is None
         self.stats.on_tokens(act.req.rid, len(new), int(res.n_accepted[slot]), now)
         self._m_accept.observe(int(res.n_accepted[slot]))
+        if self.depth_ctl is not None:  # the same measurement feeds the EMA
+            self.depth_ctl.observe(slot, int(res.n_accepted[slot]))
         if new:
             self._m_tokens.inc(len(new))
             if first:
@@ -268,6 +344,8 @@ class EngineStepper:
                                                           "slot": slot}):
             self.session.release_slot(slot)
         self.slots[slot] = None
+        if self.depth_ctl is not None:  # acceptance history dies with the request
+            self.depth_ctl.clear_slot(slot)
         self.stats.on_finish(act.req.rid, now, truncated=act.truncated)
         self._m_finished.inc()
         if act.truncated:
@@ -371,32 +449,39 @@ class ServingRuntimeBase:
     def occupied(self) -> int:
         return sum(s.occupied for s in self.steppers)
 
-    def _route(self) -> int | None:
+    def _route(self, now: float) -> int | None:
         """Pick the admission target: least-loaded stepper (occupancy
-        fraction) among those with a free slot; FIFO tie-break — the stepper
-        whose last admission is oldest — so equal load spreads round-robin.
-        None when the fleet is full.  (With one stepper this degenerates to
-        "is a slot free".)"""
+        fraction) among those with a free slot.  Equal load breaks on
+        deadline slack — the replica whose in-flight work has the MOST
+        remaining slack wins, so a new admission (whose rounds every
+        co-resident request shares) is steered away from the replica that
+        must finish something soonest.  Replicas with no deadlined work
+        have infinite slack and tie, falling through to the FIFO tie-break
+        — the stepper whose last admission is oldest — so deadline-free
+        fleets keep the round-robin spread exactly.  None when the fleet is
+        full.  (With one stepper this degenerates to "is a slot free".)"""
         best_key, best = None, None
         for i, st in enumerate(self.steppers):
             if not st.has_free_slot:
                 continue
-            key = (st.load, self._last_dispatch[i])
+            key = (st.load, -st.deadline_slack(now), self._last_dispatch[i])
             if best_key is None or key < best_key:
                 best_key, best = key, i
         return best
 
     def _admit_ready(self) -> None:
-        """Drain arrived requests into free slots fleet-wide (FIFO), one
-        routing decision per request; each admission reads the clock ONCE —
-        the same timestamp gates the pop and stamps ``on_admit``."""
+        """Drain arrived requests into free slots fleet-wide, one routing
+        decision per request (the queue's deadline-aware pop picks WHICH
+        request, ``_route`` picks WHERE); each admission reads the clock
+        ONCE — the same timestamp keys the routing slack, gates the pop,
+        and stamps ``on_admit``."""
         while True:
+            now = self.clock.now()
             route_span = self.tracer.begin("route", "router")
-            target = self._route()
+            target = self._route(now)
             if target is None:
                 route_span.end()
                 return
-            now = self.clock.now()
             with self.tracer.span("queue_pop", "router"):
                 req = self.queue.pop_ready(now)
             if req is None:
@@ -431,17 +516,29 @@ class ServingRuntimeBase:
                 continue
             # one global round: every busy stepper steps (concurrent across
             # disjoint device groups on real hardware), the clock ticks once,
-            # then every stepper absorbs and retires
-            stepped = [(st, st.step()) for st in busy]
-            self.clock.on_round()
-            now = self.clock.now()
-            depth = self.queue.depth(now)
-            self._m_queue_depth.append(now, depth)
-            self.tracer.counter("queue_depth", depth)
-            self.tracer.counter("occupied", self.occupied)
-            for st, res in stepped:
-                st.stats.on_round(st.occupied, depth)
-                st.absorb_round(res, now)
+            # then every stepper absorbs and retires.  If any dispatch or
+            # absorb raises, every other dispatched round is aborted on the
+            # way out — no open round span, no orphaned RoundInFlight.
+            stepped: list = []
+            try:
+                for st in busy:
+                    stepped.append((st, st.step()))
+                # the global round costs what the deepest replica round cost
+                # (replicas run concurrently on disjoint device groups)
+                self.clock.on_round(max(st.last_round_depth for st in busy))
+                now = self.clock.now()
+                qdepth = self.queue.depth(now)
+                self._m_queue_depth.append(now, qdepth)
+                self.tracer.counter("queue_depth", qdepth)
+                self.tracer.counter("occupied", self.occupied)
+                while stepped:
+                    st, res = stepped.pop(0)
+                    st.stats.on_round(st.occupied, qdepth)
+                    st.absorb_round(res, now)
+            except BaseException:
+                for st, res in stepped:
+                    st.abort_round(res)
+                raise
         t1 = self.clock.now()
         for st in self.steppers:
             st.stats.finished_s = t1
@@ -459,13 +556,14 @@ class ContinuousBatchingRuntime(ServingRuntimeBase):
                  stats: ServerStats | None = None,
                  stream: Callable[[int, list, bool], None] | None = None,
                  tracer=None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 scheduler: SchedulerConfig | None = None):
         self._init_admission(queue, clock, tracer, metrics)
         self.stats = stats if stats is not None else ServerStats()
         self.stepper = EngineStepper(
             engine, tparams, dparams, n_slots,
             stats=self.stats, stream=stream, results=self.results,
-            tracer=self.tracer, metrics=self.metrics)
+            tracer=self.tracer, metrics=self.metrics, scheduler=scheduler)
         self._init_fleet([self.stepper])
         self.engine, self.n_slots = engine, n_slots
 

@@ -29,6 +29,8 @@ class RequestRecord:
     n_rounds: int = 0
     n_accepted: int = 0
     truncated: bool = False  # cut off by the KV budget, not EOS/max_new
+    deadline_s: float | None = None  # absolute finish deadline; None: best-effort
+    priority: int = 0
 
     @property
     def ttft_s(self) -> float | None:
@@ -48,17 +50,73 @@ class RequestRecord:
 
     @property
     def acceptance(self) -> float:
-        """Accepted draft tokens per verification round."""
-        return self.n_accepted / max(self.n_rounds, 1)
+        """Accepted draft tokens per verification round.  A record with no
+        rounds has no measurable acceptance: nan, per the repo's nan-marking
+        convention — a floored 0.0 here would silently read as 'this request
+        accepted nothing'."""
+        return self.n_accepted / self.n_rounds if self.n_rounds else float("nan")
 
     @property
     def compression_ratio(self) -> float:
-        """Emitted tokens per target inference (the paper's metric)."""
-        return self.n_tokens / max(self.n_rounds, 1)
+        """Emitted tokens per target inference (the paper's metric); nan
+        before any round has run."""
+        return self.n_tokens / self.n_rounds if self.n_rounds else float("nan")
+
+    @property
+    def slack_s(self) -> float | None:
+        """Deadline slack at finish: positive met the SLO by that margin,
+        negative missed by it.  None while unfinished or best-effort."""
+        if self.deadline_s is None or self.finish_s is None:
+            return None
+        return self.deadline_s - self.finish_s
+
+    @property
+    def met_deadline(self) -> bool | None:
+        """Whether the request finished by its deadline (None: best-effort
+        or still in flight)."""
+        s = self.slack_s
+        return None if s is None else s >= 0.0
 
 
 def percentile(xs, p: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else float("nan")
+
+
+def _mean_acceptance(recs) -> float:
+    """Rounds-weighted mean acceptance: total accepted over total rounds.
+    An unweighted mean of per-request ratios let a 1-round request count
+    the same as a 100-round request (the same bias PR 3 fixed in fleet
+    occupancy).  Weighting by rounds also naturally excludes zero-round
+    records (weight 0) instead of propagating their nan acceptance.  0.0
+    with no records at all (matching ``mean_occupancy``); nan when records
+    exist but no round ever ran (no measurement, not zero acceptance)."""
+    if not recs:
+        return 0.0
+    rounds = sum(r.n_rounds for r in recs)
+    if not rounds:
+        return float("nan")
+    return sum(r.n_accepted for r in recs) / rounds
+
+
+def _slo_fields(recs) -> dict:
+    """SLO attainment + slack percentiles over finished records.  Only
+    deadlined requests enter: attainment over best-effort traffic is not a
+    meaningful SLO.  nan-marked when nothing carried a deadline."""
+    slacks = [r.slack_s for r in recs if r.slack_s is not None]
+    met = sum(1 for s in slacks if s >= 0.0)
+    return {
+        "n_deadlined": len(slacks),
+        "slo_attainment": met / len(slacks) if slacks else float("nan"),
+        "slack_p50_s": percentile(slacks, 50),
+        "slack_p10_s": percentile(slacks, 10),  # near-worst-case margin
+    }
+
+
+def _fmt_or_dash(v: float | None, spec: str) -> str:
+    """Render a telemetry cell: ``-`` for missing (None/nan) values."""
+    if v is None or (isinstance(v, float) and np.isnan(v)):
+        return "-"
+    return format(v, spec)
 
 
 class ServerStats:
@@ -72,10 +130,12 @@ class ServerStats:
 
     # ---- runtime hooks ---------------------------------------------------
     def on_admit(self, rid: int, slot: int, arrival_s: float, now: float,
-                 replica: int = 0) -> None:
+                 replica: int = 0, deadline_s: float | None = None,
+                 priority: int = 0) -> None:
         self.records[rid] = RequestRecord(
             rid=rid, slot=slot, replica=replica, arrival_s=arrival_s,
             admitted_s=now, admit_round=self.rounds,
+            deadline_s=deadline_s, priority=priority,
         )
 
     def on_round(self, occupied: int, queue_depth: int) -> None:
@@ -121,28 +181,34 @@ class ServerStats:
             "ttft_p50_s": percentile(ttfts, 50),
             "ttft_p99_s": percentile(ttfts, 99),
             "mean_occupancy": self.mean_occupancy,
-            "mean_acceptance": float(np.mean([r.acceptance for r in recs])) if recs else 0.0,
+            "mean_acceptance": _mean_acceptance(recs),
             "rounds": self.rounds,
+            **_slo_fields(recs),
         }
 
     def report(self) -> str:
-        lines = ["rid slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok"]
+        lines = ["rid slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok  slack_s"]
         for r in sorted(self.records.values(), key=lambda r: r.rid):
-            ttft = f"{r.ttft_s:7.3f}" if r.ttft_s is not None else "      -"
-            tps = f"{r.tok_per_s:6.1f}" if r.tok_per_s is not None else "     -"
             lines.append(
                 f"{r.rid:3d} {r.slot:4d} {r.arrival_s:7.3f} {r.admitted_s:6.3f} "
-                f"   [{r.admit_round:4d},{r.finish_round:4d})  {ttft} {tps} "
-                f"{r.acceptance:7.2f} {r.n_tokens:5d}"
+                f"   [{r.admit_round:4d},{r.finish_round:4d})  "
+                f"{_fmt_or_dash(r.ttft_s, '7.3f'):>7} {_fmt_or_dash(r.tok_per_s, '6.1f'):>6} "
+                f"{_fmt_or_dash(r.acceptance, '7.2f'):>7} {r.n_tokens:5d} "
+                f"{_fmt_or_dash(r.slack_s, '+8.3f'):>8}"
                 + ("  TRUNCATED(kv-budget)" if r.truncated else "")
+                + ("  LATE" if r.met_deadline is False else "")
             )
         s = self.summary()
-        tps = s["throughput_tok_s"]
-        tps_str = "-" if np.isnan(tps) else f"{tps:.1f}"
         lines.append(
-            f"aggregate: {s['n_finished']} finished, {tps_str} tok/s, "
-            f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
-            f"occupancy {s['mean_occupancy']:.2f}, acceptance {s['mean_acceptance']:.2f}"
+            f"aggregate: {s['n_finished']} finished, "
+            f"{_fmt_or_dash(s['throughput_tok_s'], '.1f')} tok/s, "
+            f"TTFT p50={_fmt_or_dash(s['ttft_p50_s'], '.3f')}s "
+            f"p99={_fmt_or_dash(s['ttft_p99_s'], '.3f')}s, "
+            f"occupancy {s['mean_occupancy']:.2f}, "
+            f"acceptance {_fmt_or_dash(s['mean_acceptance'], '.2f')}"
+            + (f", SLO {s['slo_attainment']:.0%} of {s['n_deadlined']} "
+               f"(slack p50 {s['slack_p50_s']:+.3f}s p10 {s['slack_p10_s']:+.3f}s)"
+               if s["n_deadlined"] else "")
         )
         return "\n".join(lines)
 
@@ -155,8 +221,9 @@ class ServerStats:
 def merge_summary(per_replica: list["ServerStats"], accept_hists=None) -> dict:
     """Fold N per-replica ServerStats into one fleet summary: global TTFT
     percentiles and throughput (tokens over the union of serving windows),
-    plus the per-replica occupancy/round breakdown that shows whether the
-    router kept the fleet balanced.
+    rounds-weighted fleet acceptance, SLO attainment + slack percentiles
+    over the fleet's deadlined requests, plus the per-replica occupancy/
+    round breakdown that shows whether the router kept the fleet balanced.
 
     ``accept_hists`` (optional): the per-replica ``serving_accept_depth``
     Histogram objects.  Replicas may run different draft depths and so have
@@ -198,9 +265,8 @@ def merge_summary(per_replica: list["ServerStats"], accept_hists=None) -> dict:
         "per_replica_occupancy": [st.mean_occupancy for st in per_replica],
         "per_replica_finished": [len(st.finished_records()) for st in per_replica],
         "per_replica_rounds": [st.rounds for st in per_replica],
-        "mean_acceptance": (
-            float(np.mean([r.acceptance for r in recs])) if recs else 0.0
-        ),
+        "mean_acceptance": _mean_acceptance(recs),
+        **_slo_fields(recs),
     }
 
 
@@ -208,16 +274,17 @@ def fleet_report(per_replica: list["ServerStats"]) -> str:
     """Human-readable fleet report: every request row (tagged with the
     replica that served it) in rid order, then per-replica occupancy, then
     the merged aggregate line."""
-    lines = ["rid rep slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok"]
+    lines = ["rid rep slot  arrive  admit  rounds[admit,fin)   ttft_s  tok/s  accept  ntok  slack_s"]
     allrecs = [r for st in per_replica for r in st.records.values()]
     for r in sorted(allrecs, key=lambda r: r.rid):
-        ttft = f"{r.ttft_s:7.3f}" if r.ttft_s is not None else "      -"
-        tps = f"{r.tok_per_s:6.1f}" if r.tok_per_s is not None else "     -"
         lines.append(
             f"{r.rid:3d} {r.replica:3d} {r.slot:4d} {r.arrival_s:7.3f} {r.admitted_s:6.3f} "
-            f"   [{r.admit_round:4d},{r.finish_round:4d})  {ttft} {tps} "
-            f"{r.acceptance:7.2f} {r.n_tokens:5d}"
+            f"   [{r.admit_round:4d},{r.finish_round:4d})  "
+            f"{_fmt_or_dash(r.ttft_s, '7.3f'):>7} {_fmt_or_dash(r.tok_per_s, '6.1f'):>6} "
+            f"{_fmt_or_dash(r.acceptance, '7.2f'):>7} {r.n_tokens:5d} "
+            f"{_fmt_or_dash(r.slack_s, '+8.3f'):>8}"
             + ("  TRUNCATED(kv-budget)" if r.truncated else "")
+            + ("  LATE" if r.met_deadline is False else "")
         )
     s = merge_summary(per_replica)
     for i, st in enumerate(per_replica):
@@ -225,11 +292,14 @@ def fleet_report(per_replica: list["ServerStats"]) -> str:
             f"replica {i}: {len(st.finished_records())} finished over {st.rounds} rounds, "
             f"occupancy {st.mean_occupancy:.2f}"
         )
-    tps = s["throughput_tok_s"]
-    tps_str = "-" if np.isnan(tps) else f"{tps:.1f}"
     lines.append(
-        f"fleet: {s['n_finished']} finished, {tps_str} tok/s, "
-        f"TTFT p50={s['ttft_p50_s']:.3f}s p99={s['ttft_p99_s']:.3f}s, "
-        f"acceptance {s['mean_acceptance']:.2f}"
+        f"fleet: {s['n_finished']} finished, "
+        f"{_fmt_or_dash(s['throughput_tok_s'], '.1f')} tok/s, "
+        f"TTFT p50={_fmt_or_dash(s['ttft_p50_s'], '.3f')}s "
+        f"p99={_fmt_or_dash(s['ttft_p99_s'], '.3f')}s, "
+        f"acceptance {_fmt_or_dash(s['mean_acceptance'], '.2f')}"
+        + (f", SLO {s['slo_attainment']:.0%} of {s['n_deadlined']} "
+           f"(slack p50 {s['slack_p50_s']:+.3f}s p10 {s['slack_p10_s']:+.3f}s)"
+           if s["n_deadlined"] else "")
     )
     return "\n".join(lines)

@@ -46,10 +46,14 @@ def _fleet(eng, tp, dp, n_rep=2, n_slots=2, **kw):
 
 
 class _Stub:
-    def __init__(self, occupied, n_slots):
+    def __init__(self, occupied, n_slots, slack=float("inf")):
         self.occupied, self.n_slots = occupied, n_slots
         self.has_free_slot = occupied < n_slots
         self.load = occupied / n_slots
+        self._slack = slack
+
+    def deadline_slack(self, now):
+        return self._slack
 
 
 def _router(stubs, last_dispatch=None):
@@ -61,9 +65,9 @@ def _router(stubs, last_dispatch=None):
 
 def test_route_picks_least_loaded():
     rt = _router([_Stub(1, 2), _Stub(0, 2)])
-    assert rt._route() == 1  # 0.5 vs 0.0 load
+    assert rt._route(0.0) == 1  # 0.5 vs 0.0 load
     rt = _router([_Stub(0, 2), _Stub(1, 2)])
-    assert rt._route() == 0
+    assert rt._route(0.0) == 0
 
 
 def test_route_load_is_a_fraction_not_a_count():
@@ -71,24 +75,40 @@ def test_route_load_is_a_fraction_not_a_count():
     # count would send this to replica 0), so heterogeneous slot counts
     # still balance
     rt = _router([_Stub(1, 2), _Stub(3, 8)])
-    assert rt._route() == 1
+    assert rt._route(0.0) == 1
     rt = _router([_Stub(2, 4), _Stub(3, 4)])
-    assert rt._route() == 0
+    assert rt._route(0.0) == 0
 
 
 def test_route_fifo_tiebreak_spreads_equal_load():
     # equal load: the replica whose last admission is OLDEST wins
     rt = _router([_Stub(1, 2), _Stub(1, 2)], last_dispatch=[2, 1])
-    assert rt._route() == 1
+    assert rt._route(0.0) == 1
     rt = _router([_Stub(1, 2), _Stub(1, 2)], last_dispatch=[1, 2])
-    assert rt._route() == 0
+    assert rt._route(0.0) == 0
 
 
 def test_route_skips_full_replicas_and_full_fleet():
     rt = _router([_Stub(2, 2), _Stub(1, 2)])
-    assert rt._route() == 1  # replica 0 is full
+    assert rt._route(0.0) == 1  # replica 0 is full
     rt = _router([_Stub(2, 2), _Stub(2, 2)])
-    assert rt._route() is None  # fleet full: leave the queue alone
+    assert rt._route(0.0) is None  # fleet full: leave the queue alone
+
+
+def test_route_slack_breaks_load_ties_before_fifo():
+    # equal load, replica 0 has a deadline 2s out, replica 1 has 10s of
+    # slack: the new admission steers to the replica with MORE slack even
+    # though FIFO (last_dispatch) would have picked replica 0
+    rt = _router([_Stub(1, 2, slack=2.0), _Stub(1, 2, slack=10.0)],
+                 last_dispatch=[1, 2])
+    assert rt._route(0.0) == 1
+    # unequal load still dominates: the tighter replica wins when emptier
+    rt = _router([_Stub(0, 2, slack=2.0), _Stub(1, 2, slack=10.0)],
+                 last_dispatch=[1, 2])
+    assert rt._route(0.0) == 0
+    # deadline-free fleets (all +inf slack) keep the exact FIFO tie-break
+    rt = _router([_Stub(1, 2), _Stub(1, 2)], last_dispatch=[2, 1])
+    assert rt._route(0.0) == 1
 
 
 # ---------------------------------------------------------------------------
@@ -178,9 +198,16 @@ def test_fleet_stats_merge(sharded_engine):
     assert "replica 0:" in report and "replica 1:" in report and "fleet:" in report
     assert fleet_report(rt.stats) == report
     # summary() additionally folds the per-replica accept-depth histograms
-    # (union-merged edges); modulo those keys it IS merge_summary
+    # (union-merged edges); modulo those keys it IS merge_summary.  SLO
+    # fields are nan here (no request carried a deadline), so compare
+    # nan-aware: nan == nan for this purpose
     base = merge_summary(rt.stats)
-    assert {k: v for k, v in s.items() if k in base} == base
+    for k, v in base.items():
+        got = s[k]
+        if isinstance(v, float) and v != v:
+            assert got != got, k
+        else:
+            assert got == v, k
     assert s["accept_depth_hist"]["count"] > 0
     assert s["accept_depth_mean"] == pytest.approx(
         s["accept_depth_hist"]["sum"] / s["accept_depth_hist"]["count"])
